@@ -1,0 +1,78 @@
+"""Paper §6.3 / Table 1: label ranking via soft Spearman correlation.
+
+Synthetic label-ranking datasets (linear ground truth + observation noise,
+mirroring the semi-synthetic regime of Hullermeier et al.): a linear model
+trained with (a) the soft-rank Spearman loss (r_Q, r_E, and the appendix
+r~_E variant) vs (b) the "No projection" ablation (squared loss directly
+on scores).  Metric: Spearman's rho on held-out data.  Reproduced claim:
+the soft-rank layer improves rho on most datasets.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import (
+    hard_rank, soft_rank, soft_rank_kl_direct, soft_spearman_loss,
+    spearman_correlation)
+
+STEPS = 200
+
+
+def make_dataset(rng, d=16, n_labels=8, n=256, noise=0.5):
+  w = rng.normal(size=(d, n_labels))
+  x = rng.normal(size=(n, d)).astype(np.float32)
+  scores = x @ w + noise * rng.normal(size=(n, n_labels))
+  ranks = np.asarray(hard_rank(jnp.array(scores), "ASCENDING"))
+  return jnp.array(x), jnp.array(ranks.astype(np.float32))
+
+
+def train(loss_kind, x, ranks):
+  d, n_labels = x.shape[1], ranks.shape[1]
+  w = jnp.zeros((d, n_labels))
+
+  def loss(w):
+    theta = x @ w
+    if loss_kind == "no_projection":
+      return 0.5 * jnp.mean(jnp.sum((theta - ranks) ** 2, -1))
+    if loss_kind == "soft_rank_q":
+      return soft_spearman_loss(theta, ranks, 1.0, "l2")
+    if loss_kind == "soft_rank_e":
+      return soft_spearman_loss(theta, ranks, 1.0, "kl")
+    if loss_kind == "kl_direct":
+      r = soft_rank_kl_direct(theta, 1.0)
+      return 0.5 * jnp.mean(jnp.sum((r - ranks) ** 2, -1))
+    raise ValueError(loss_kind)
+
+  g_fn = jax.jit(jax.grad(loss))
+  lr = 0.02
+  for _ in range(STEPS):
+    w = w - lr * g_fn(w)
+  return w
+
+
+def run():
+  rng = np.random.default_rng(0)
+  for noise in (0.25, 1.0):
+    x, ranks = make_dataset(rng, noise=noise)
+    n_train = int(0.8 * x.shape[0])
+    xtr, rtr = x[:n_train], ranks[:n_train]
+    xte, rte = x[n_train:], ranks[n_train:]
+    for kind in ("soft_rank_q", "soft_rank_e", "kl_direct",
+                 "no_projection"):
+      t0 = time.perf_counter()
+      w = train(kind, xtr, rtr)
+      dt = (time.perf_counter() - t0) / STEPS * 1e6
+      pred = hard_rank(xte @ w, "ASCENDING")
+      rho = float(jnp.mean(spearman_correlation(pred, rte)))
+      emit(f"table1_label_ranking/{kind}/noise={noise}", dt,
+           f"spearman_rho={rho:.3f}")
+
+
+if __name__ == "__main__":
+  run()

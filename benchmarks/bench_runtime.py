@@ -1,0 +1,65 @@
+"""Paper Figure 4 (right): runtime vs input dimension n.
+
+Compares our O(n log n) soft rank (Q and E) against the paper's baselines:
+OT/Sinkhorn (O(T n^2)) and All-pairs (O(n^2)), forward-only and with
+backpropagation, on a batch of vectors (batch scaled for single-core CPU;
+the paper used batch 128 on GPU).  The claim being reproduced: our
+operators' runtime is nearly flat in n while baselines grow quadratically
+and exhaust memory first.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import soft_rank
+from repro.core.baselines import allpairs_rank, ot_rank
+
+BATCH = 8
+NS = (100, 500, 1000, 2000)      # paper used up to 5000 on GPU; CPU-scaled
+OT_ITERS = 50
+BWD_MAX_N = 1000                 # O(n^2) baselines w/ backprop OOM/time out
+                                 # first — exactly the paper's point
+
+
+def run():
+  rng = np.random.default_rng(0)
+
+  for n in NS:
+    theta = jnp.array(rng.normal(size=(BATCH, n)).astype(np.float32))
+
+    fns = {
+        "soft_rank_q": jax.jit(lambda t: soft_rank(t, 1e-1, "l2")),
+        "soft_rank_e": jax.jit(lambda t: soft_rank(t, 1e-1, "kl")),
+        "allpairs": jax.jit(lambda t: allpairs_rank(t, 0.1)),
+        f"ot_sinkhorn_t{OT_ITERS}": jax.jit(
+            lambda t: ot_rank(t, 1e-2, num_iters=OT_ITERS)),
+    }
+    for name, fn in fns.items():
+      us = time_fn(fn, theta, iters=3)
+      emit(f"fig4_runtime/{name}/n={n}", us, f"batch={BATCH},fwd")
+
+    grads = {
+        "soft_rank_q": jax.jit(
+            jax.grad(lambda t: jnp.sum(soft_rank(t, 1e-1, "l2") ** 2))),
+        "allpairs": jax.jit(
+            jax.grad(lambda t: jnp.sum(allpairs_rank(t, 0.1) ** 2))),
+        f"ot_sinkhorn_t{OT_ITERS}": jax.jit(
+            jax.grad(lambda t: jnp.sum(ot_rank(t, 1e-2, OT_ITERS) ** 2))),
+    }
+    for name, fn in grads.items():
+      if n > BWD_MAX_N and name != "soft_rank_q":
+        emit(f"fig4_runtime_bwd/{name}/n={n}", float("nan"),
+             "skipped: O(n^2) baseline beyond CPU budget")
+        continue
+      us = time_fn(fn, theta, iters=3)
+      emit(f"fig4_runtime_bwd/{name}/n={n}", us, f"batch={BATCH},fwd+bwd")
+
+
+if __name__ == "__main__":
+  run()

@@ -1,0 +1,52 @@
+"""Run every benchmark. One module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig4_runtime,...]
+
+Output: ``name,us_per_call,derived`` CSV on stdout.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (
+    bench_label_ranking,
+    bench_lts,
+    bench_router,
+    bench_runtime,
+    bench_topk,
+)
+
+BENCHES = {
+    "fig4_runtime": bench_runtime.run,        # Figure 4 (right)
+    "fig4_topk": bench_topk.run,              # Figure 4 (left/center)
+    "table1_label_ranking": bench_label_ranking.run,  # Table 1 / Figure 5
+    "fig6_fig7_lts": bench_lts.run,           # Figures 6-7
+    "router": bench_router.run,               # framework hot path
+}
+
+
+def main() -> None:
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--only", default=None,
+                  help="comma-separated subset of " + ",".join(BENCHES))
+  args = ap.parse_args()
+  names = args.only.split(",") if args.only else list(BENCHES)
+
+  print("name,us_per_call,derived")
+  failed = []
+  for name in names:
+    try:
+      BENCHES[name]()
+    except Exception:  # keep the harness going; report at the end
+      failed.append(name)
+      traceback.print_exc(file=sys.stderr)
+  if failed:
+    print(f"FAILED: {failed}", file=sys.stderr)
+    raise SystemExit(1)
+
+
+if __name__ == "__main__":
+  main()

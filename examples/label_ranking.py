@@ -1,0 +1,54 @@
+"""Label ranking via the differentiable Spearman coefficient (paper §6.3).
+
+Trains a linear model on synthetic label-ranking data with the soft-rank
+Spearman loss, then ablates the soft-rank layer ("No projection" column of
+the paper's Table 1) — the projection consistently improves held-out rho.
+
+  PYTHONPATH=src python examples/label_ranking.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    hard_rank, soft_spearman_loss, spearman_correlation)
+
+
+def make_dataset(rng, d=20, n_labels=10, n=512, noise=0.75):
+  w = rng.normal(size=(d, n_labels))
+  x = rng.normal(size=(n, d)).astype(np.float32)
+  scores = x @ w + noise * rng.normal(size=(n, n_labels))
+  ranks = np.asarray(hard_rank(jnp.array(scores), "ASCENDING"))
+  return jnp.array(x), jnp.array(ranks.astype(np.float32))
+
+
+def train(x, ranks, use_projection: bool, steps=300, lr=0.02):
+  w = jnp.zeros((x.shape[1], ranks.shape[1]))
+
+  def loss(w):
+    theta = x @ w
+    if use_projection:
+      return soft_spearman_loss(theta, ranks, 1.0)
+    return 0.5 * jnp.mean(jnp.sum((theta - ranks) ** 2, -1))
+
+  g = jax.jit(jax.grad(loss))
+  for _ in range(steps):
+    w = w - lr * g(w)
+  return w
+
+
+def main():
+  rng = np.random.default_rng(0)
+  x, ranks = make_dataset(rng)
+  n_tr = int(0.8 * len(x))
+  for use_proj in (True, False):
+    w = train(x[:n_tr], ranks[:n_tr], use_proj)
+    pred = hard_rank(x[n_tr:] @ w, "ASCENDING")
+    rho = float(jnp.mean(spearman_correlation(pred, ranks[n_tr:])))
+    name = "soft-rank layer (r_Q)" if use_proj else "no projection"
+    print(f"{name:24s} held-out Spearman rho = {rho:.4f}")
+
+
+if __name__ == "__main__":
+  main()

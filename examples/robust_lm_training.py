@@ -1,0 +1,100 @@
+"""Robust LM pretraining with soft least-trimmed-squares token losses.
+
+The paper's §6.4 application lifted to language modeling: a fraction of
+training targets is corrupted (label noise); the soft-LTS loss soft-sorts
+per-token losses and down-weights the largest ones, so corrupted tokens
+stop dominating the gradient.  We train the same llama-family model with
+and without trimming and compare the loss ON CLEAN TOKENS (the pipeline
+exposes the corruption mask, used for evaluation only).
+
+CPU demo (default ~20M params, a few minutes):
+  PYTHONPATH=src python examples/robust_lm_training.py
+
+Full recipe (~100M params, few hundred steps — sized for a real chip):
+  PYTHONPATH=src python examples/robust_lm_training.py --full --steps 300
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import pipeline_for_arch
+from repro.launch import steps as ST
+from repro.models import transformer as T
+from repro.optim import adamw
+
+
+def make_cfg(full: bool, trim: float) -> ArchConfig:
+  if full:
+    dims = dict(num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+                head_dim=64, d_ff=2048, vocab_size=32000)   # ~100M params
+  else:
+    dims = dict(num_layers=4, d_model=256, num_heads=4, num_kv_heads=2,
+                head_dim=64, d_ff=1024, vocab_size=8192)    # ~20M params
+  return ArchConfig(
+      name="robust-lm", family="dense", block_cycle=("dense",),
+      mlp_variant="swiglu", dtype="float32", remat="none",
+      loss_trim_fraction=trim, loss_trim_eps=1e-2,
+      q_chunk=128, kv_chunk=128, xent_chunk=128, **dims)
+
+
+def run(trim: float, args) -> list[float]:
+  cfg = make_cfg(args.full, trim)
+  pipe = pipeline_for_arch(cfg, args.batch, args.seq, seed=0,
+                           corrupt_fraction=args.corrupt)
+  params = T.init_params(cfg, jax.random.PRNGKey(0))
+  opt_cfg = adamw.AdamWConfig(lr=1e-3)
+  opt = ST.init_opt_state(cfg, opt_cfg, params)
+  train_step = jax.jit(ST.make_train_step(cfg, opt_cfg))
+
+  @jax.jit
+  def clean_loss(params, batch, mask):
+    tok, _ = T.forward_train(cfg, params, batch)
+    keep = 1.0 - mask
+    return jnp.sum(tok * keep) / jnp.maximum(jnp.sum(keep), 1)
+
+  clean = []
+  for step in range(args.steps):
+    raw = pipe.batch_at(step)
+    mask = jnp.asarray(raw.pop("corrupt_mask").astype(np.float32))
+    batch = {k: jnp.asarray(v) for k, v in raw.items()}
+    params, opt, m = train_step(params, opt, batch)
+    if step % args.eval_every == 0 or step == args.steps - 1:
+      cl = float(clean_loss(params, batch, mask))
+      clean.append(cl)
+      print(f"  step {step:4d}  train {float(m['loss']):.4f}  "
+            f"clean-token {cl:.4f}")
+  return clean
+
+
+def main():
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--full", action="store_true")
+  ap.add_argument("--steps", type=int, default=60)
+  ap.add_argument("--batch", type=int, default=8)
+  ap.add_argument("--seq", type=int, default=128)
+  ap.add_argument("--corrupt", type=float, default=0.25)
+  ap.add_argument("--trim", type=float, default=0.25)
+  ap.add_argument("--eval-every", type=int, default=10)
+  args = ap.parse_args()
+
+  print(f"[robust-lm] corruption={args.corrupt:.0%}  "
+        f"({'~100M' if args.full else '~20M'} params)")
+  print("[robust-lm] baseline (no trimming):")
+  t0 = time.time()
+  base = run(0.0, args)
+  print("[robust-lm] soft-LTS trimming "
+        f"(trim={args.trim:.0%}, paper §6.4):")
+  trimmed = run(args.trim, args)
+  print(f"\nclean-token loss:  baseline {base[-1]:.4f}  "
+        f"vs soft-LTS {trimmed[-1]:.4f}  "
+        f"(lower is better; {time.time()-t0:.0f}s total)")
+
+
+if __name__ == "__main__":
+  main()

@@ -1,0 +1,97 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from cell JSONs.
+
+  PYTHONPATH=src python -m repro.analysis.report [--dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_cells(directory: str, mesh: str = "single", tagged: bool = False):
+  cells = []
+  for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+    rec = json.load(open(path))
+    if rec.get("mesh") != mesh:
+      continue
+    if bool(rec.get("tag")) != tagged:
+      continue
+    cells.append(rec)
+  return cells
+
+
+def fmt_bytes(b):
+  return f"{b / 2**30:.2f}"
+
+
+def roofline_table(cells) -> str:
+  hdr = ("| arch | shape | dominant | compute_s | memory_s | collective_s | "
+         "MODEL_FLOPS | useful ratio | roofline frac | mem GiB/dev |\n"
+         "|---|---|---|---|---|---|---|---|---|---|\n")
+  rows = []
+  for rec in cells:
+    if rec.get("status") == "skipped":
+      rows.append(f"| {rec['arch']} | {rec['shape']} | — skipped: "
+                  f"{rec['reason'][:60]}… | | | | | | | |")
+      continue
+    if rec.get("status") != "ok":
+      rows.append(f"| {rec['arch']} | {rec['shape']} | ERROR | | | | | | | |")
+      continue
+    r = rec["roofline"]
+    mem = rec["memory"]["peak_estimate_bytes"]
+    rows.append(
+        f"| {rec['arch']} | {rec['shape']} | **{r['dominant'][:-2]}** | "
+        f"{r['compute_s']*1e3:.1f}ms | {r['memory_s']*1e3:.1f}ms | "
+        f"{r['collective_s']*1e3:.1f}ms | {r['model_flops']:.2e} | "
+        f"{r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.3f} | "
+        f"{fmt_bytes(mem)} |")
+  return hdr + "\n".join(rows)
+
+
+def dryrun_table(cells, cells_multi) -> str:
+  hdr = ("| arch | shape | 16x16 compile | 2x16x16 compile | FLOPs/dev | "
+         "HBM GB/dev | coll GB/dev | collectives |\n"
+         "|---|---|---|---|---|---|---|---|\n")
+  multi = {(r["arch"], r["shape"]): r for r in cells_multi}
+  rows = []
+  for rec in cells:
+    key = (rec["arch"], rec["shape"])
+    m = multi.get(key, {})
+    if rec.get("status") == "skipped":
+      rows.append(f"| {rec['arch']} | {rec['shape']} | skip | skip "
+                  f"| | | | noted in DESIGN.md §6 |")
+      continue
+    if rec.get("status") != "ok":
+      rows.append(f"| {rec['arch']} | {rec['shape']} | ERROR | | | | | |")
+      continue
+    p = rec["hlo_parsed"]
+    colls = ", ".join(f"{k}:{v/1e9:.1f}G"
+                      for k, v in sorted(p["collectives_by_type"].items()))
+    ok_m = "ok" if m.get("status") == "ok" else m.get("status", "?")
+    rows.append(
+        f"| {rec['arch']} | {rec['shape']} | ok ({rec['compile_s']:.0f}s) | "
+        f"{ok_m} ({m.get('compile_s', 0):.0f}s) | "
+        f"{p['flops_per_device']/1e12:.2f}T | "
+        f"{p['hbm_bytes_per_device']/1e9:.0f} | "
+        f"{p['collective_bytes_per_device']/1e9:.1f} | {colls} |")
+  return hdr + "\n".join(rows)
+
+
+def main():
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--dir", default="experiments/dryrun")
+  args = ap.parse_args()
+  single = load_cells(args.dir, "single")
+  multi = load_cells(args.dir, "multi")
+  print("## §Dry-run (single-pod 16x16 = 256 chips; multi-pod 2x16x16 = "
+        "512 chips)\n")
+  print(dryrun_table(single, multi))
+  print("\n## §Roofline (single-pod, per assignment)\n")
+  print(roofline_table(single))
+
+
+if __name__ == "__main__":
+  main()

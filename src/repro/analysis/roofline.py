@@ -1,0 +1,78 @@
+"""Roofline terms from the compiled dry-run (TPU v5e constants).
+
+  compute_s    = FLOPs_per_chip / 197e12      (bf16 peak per chip)
+  memory_s     = HBM_bytes_per_chip / 819e9
+  collective_s = collective_bytes_per_chip / 50e9   (per-link model)
+
+MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference) with N = active matmul
+params; the ratio MODEL_FLOPS / (HLO_FLOPs * chips) exposes remat /
+dispatch / masking waste.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per link (assignment's simple model)
+
+
+def count_active_params(cfg, params_shape: Any) -> tuple[int, int]:
+  """(total, active-matmul) parameter counts from a ShapeDtypeStruct tree."""
+  total = active = 0
+  flat = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+  for path, leaf in flat:
+    pstr = "/".join(str(getattr(k, "key", k)) for k in path)
+    n = 1
+    for d in leaf.shape:
+      n *= d
+    total += n
+    if "embed/table" in pstr and not cfg.tie_embeddings:
+      continue  # pure lookup, no matmul
+    if len(leaf.shape) < 2:
+      continue
+    if "/we_" in pstr:
+      # routed experts: only k of E active per token
+      n = n * cfg.experts_per_token // max(cfg.num_experts, 1)
+    active += n
+  return total, active
+
+
+def model_flops(cfg, params_shape, shape_cell) -> float:
+  _, active = count_active_params(cfg, params_shape)
+  if shape_cell.kind == "train":
+    tokens = shape_cell.global_batch * shape_cell.seq_len
+    return 6.0 * active * tokens
+  if shape_cell.kind == "prefill":
+    tokens = shape_cell.global_batch * shape_cell.seq_len
+    return 2.0 * active * tokens
+  # decode: one token per sequence
+  return 2.0 * active * shape_cell.global_batch
+
+
+def roofline_terms(parsed: dict, num_devices: int,
+                   model_flops_total: float) -> dict:
+  compute_s = parsed["flops_per_device"] / PEAK_FLOPS
+  memory_s = parsed["hbm_bytes_per_device"] / HBM_BW
+  coll_s = parsed["collective_bytes_per_device"] / LINK_BW
+  terms = {"compute_s": compute_s, "memory_s": memory_s,
+           "collective_s": coll_s}
+  dominant = max(terms, key=terms.get)
+  hlo_total = parsed["flops_per_device"] * num_devices
+  return {
+      **terms,
+      "dominant": dominant,
+      "bound_s": terms[dominant],
+      "model_flops": model_flops_total,
+      "hlo_flops_total": hlo_total,
+      "useful_flops_ratio": (model_flops_total / hlo_total
+                             if hlo_total else 0.0),
+      # fraction of the compute roofline actually achieved if the dominant
+      # term sets the step time:
+      "roofline_fraction": (model_flops_total /
+                            (num_devices * PEAK_FLOPS * terms[dominant])
+                            if terms[dominant] > 0 else 0.0),
+  }

@@ -1,0 +1,164 @@
+"""Fault-tolerant checkpointing: atomic, async, keep-N, mesh-independent.
+
+Format: one directory per step containing
+  manifest.json   — tree structure, shapes, dtypes, user metadata
+  arrays.npz      — flattened leaves keyed by tree path
+
+Writes go to ``<dir>/tmp.<step>`` and are ``os.replace``d into place, so a
+preemption mid-write never corrupts the latest checkpoint.  Arrays are
+stored *unsharded* (gathered) with path keys, so restore can re-shard onto
+any mesh shape — this is the elastic-restart path: a 512-chip checkpoint
+restores onto 256 or 1024 chips unchanged (``restore(..., shardings=)``).
+
+``AsyncCheckpointer`` runs saves on a background thread (double-buffered:
+at most one pending save; the trainer never blocks on I/O unless two saves
+collide).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+  flat = {}
+  for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+    key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+    arr = np.asarray(leaf)
+    if arr.dtype.name in ("bfloat16", "float8_e4m3fn", "float8_e5m2"):
+      # npz cannot store ml_dtypes natively: raw-encode, record the dtype
+      # in the manifest, and view back on restore.
+      arr = arr.view(np.uint16 if arr.dtype.itemsize == 2 else np.uint8)
+    flat[key] = arr
+  return flat
+
+
+def _treedef_of(tree: Any):
+  return jax.tree_util.tree_structure(tree)
+
+
+def save(directory: str, step: int, tree: Any,
+         metadata: dict | None = None, keep: int = 3) -> str:
+  os.makedirs(directory, exist_ok=True)
+  tmp = os.path.join(directory, f"tmp.{step}")
+  final = os.path.join(directory, f"step_{step:010d}")
+  if os.path.exists(tmp):
+    shutil.rmtree(tmp)
+  os.makedirs(tmp)
+
+  flat = _flatten(tree)
+  np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+  manifest = {
+      "step": step,
+      "keys": sorted(flat),
+      "shapes": {k: list(v.shape) for k, v in flat.items()},
+      "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+      "metadata": metadata or {},
+  }
+  with open(os.path.join(tmp, "manifest.json"), "w") as f:
+    json.dump(manifest, f)
+  if os.path.exists(final):
+    shutil.rmtree(final)
+  os.replace(tmp, final)
+  _gc(directory, keep)
+  return final
+
+
+def _gc(directory: str, keep: int) -> None:
+  steps = sorted(all_steps(directory))
+  for s in steps[:-keep] if keep else []:
+    shutil.rmtree(os.path.join(directory, f"step_{s:010d}"),
+                  ignore_errors=True)
+
+
+def all_steps(directory: str) -> list[int]:
+  if not os.path.isdir(directory):
+    return []
+  out = []
+  for name in os.listdir(directory):
+    if name.startswith("step_"):
+      out.append(int(name.split("_")[1]))
+  return sorted(out)
+
+
+def latest_step(directory: str) -> int | None:
+  steps = all_steps(directory)
+  return steps[-1] if steps else None
+
+
+def restore(directory: str, like: Any, step: int | None = None,
+            shardings: Any = None) -> tuple[Any, dict]:
+  """Restore into the structure of `like`.
+
+  ``shardings``: optional matching pytree of NamedSharding — arrays are
+  placed shard-by-shard onto the (possibly different) live mesh, which is
+  the elastic-scaling path.
+  """
+  if step is None:
+    step = latest_step(directory)
+    if step is None:
+      raise FileNotFoundError(f"no checkpoints under {directory}")
+  path = os.path.join(directory, f"step_{step:010d}")
+  with open(os.path.join(path, "manifest.json")) as f:
+    manifest = json.load(f)
+  data = np.load(os.path.join(path, "arrays.npz"))
+
+  flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+  leaves = []
+  flat_shard = (jax.tree_util.tree_leaves(shardings)
+                if shardings is not None else [None] * len(flat_like))
+  for (p, proto), sh in zip(flat_like, flat_shard):
+    key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in p)
+    arr = data[key]
+    want = np.dtype(proto.dtype)
+    if arr.dtype != want and arr.dtype in (np.uint16, np.uint8) and (
+        want.name in ("bfloat16", "float8_e4m3fn", "float8_e5m2")):
+      arr = arr.view(want)  # undo the raw encoding from _flatten
+    if sh is not None:
+      leaves.append(jax.device_put(arr, sh))
+    else:
+      leaves.append(jax.numpy.asarray(arr, dtype=proto.dtype))
+  tree = jax.tree_util.tree_unflatten(treedef, leaves)
+  return tree, manifest["metadata"]
+
+
+class AsyncCheckpointer:
+  """Background-thread saver: trainer thread never blocks on disk."""
+
+  def __init__(self, directory: str, keep: int = 3):
+    self.directory = directory
+    self.keep = keep
+    self._pending: threading.Thread | None = None
+    self._error: BaseException | None = None
+
+  def save(self, step: int, tree: Any, metadata: dict | None = None):
+    self.wait()  # at most one in flight
+    host_tree = jax.tree.map(np.asarray, tree)  # snapshot before mutation
+
+    def work():
+      try:
+        save(self.directory, step, host_tree, metadata, self.keep)
+      except BaseException as e:  # surfaced on next wait()
+        self._error = e
+
+    self._pending = threading.Thread(target=work, daemon=True)
+    self._pending.start()
+
+  def wait(self):
+    if self._pending is not None:
+      self._pending.join()
+      self._pending = None
+    if self._error is not None:
+      err, self._error = self._error, None
+      raise err

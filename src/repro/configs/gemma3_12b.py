@@ -1,0 +1,31 @@
+"""gemma3-12b: 48L dense, 5:1 local:global sliding-window, 262k vocab.
+
+[hf:google/gemma-3-1b-pt scaled per assignment; unverified]
+Treated as hybrid for long_500k: local layers are O(S*W); the 1-in-6 global
+layers use sequence-sharded KV (see DESIGN.md §6).
+"""
+from repro.configs.base import ArchConfig, register
+
+register(ArchConfig(
+    name="gemma3-12b",
+    family="dense",
+    num_layers=48,
+    d_model=3840,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=256,
+    d_ff=15360,
+    vocab_size=262144,
+    block_cycle=("local", "local", "local", "local", "local", "global"),
+    window_size=1024,
+    mlp_variant="geglu",
+    norm="rmsnorm",
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    fsdp=True,
+    seq_shard_activations=True,
+    supports_long_context=True,
+    remat="full",
+    grad_accum=8,
+    xent_chunk=512,
+))

@@ -1,0 +1,34 @@
+"""grok-1-314b: 64L MoE (8 experts top-2), GQA kv=8, 131k vocab.
+
+[hf:xai-org/grok-1; unverified]  Soft-top-k router by default (paper
+technique); FSDP + sequence-sharded activations (the params do not fit
+otherwise: 314B * 14B/param would need ~18GB/chip un-sharded opt state).
+"""
+from repro.configs.base import ArchConfig, register
+
+register(ArchConfig(
+    name="grok-1-314b",
+    family="moe",
+    num_layers=64,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=32768,
+    vocab_size=131072,
+    block_cycle=("moe",),
+    num_experts=8,
+    experts_per_token=2,
+    moe_d_ff=32768,
+    router="soft_topk",
+    router_eps=1.0,
+    logit_softcap=30.0,
+    mlp_variant="swiglu",
+    rope_theta=10_000.0,
+    fsdp=True,
+    seq_shard_activations=True,
+    remat="full",
+    grad_accum=8,
+    grad_accum_dtype="bfloat16",
+    xent_chunk=512,
+))

@@ -1,0 +1,27 @@
+"""llava-next-mistral-7b: mistral-7B backbone + anyres vision stub.
+
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]
+``input_specs`` supplies precomputed patch embeddings (stub frontend per
+assignment); loss covers the text region only.
+"""
+from repro.configs.base import ArchConfig, register
+
+register(ArchConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=32000,
+    block_cycle=("dense",),
+    mlp_variant="swiglu",
+    rope_theta=1_000_000.0,
+    frontend="vision",
+    num_patches=576,
+    fsdp=True,
+    remat="full",
+    grad_accum=8,
+))

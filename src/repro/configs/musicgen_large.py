@@ -1,0 +1,27 @@
+"""musicgen-large: 48L decoder over EnCodec tokens, 4 codebooks.
+
+[arXiv:2306.05284; hf]  Audio frontend is a stub: ``input_specs`` provides
+precomputed frame embeddings; 4 parallel codebook heads (vocab 2048 each).
+"""
+from repro.configs.base import ArchConfig, register
+
+register(ArchConfig(
+    name="musicgen-large",
+    family="audio",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=2048,
+    block_cycle=("dense",),
+    mlp_variant="gelu",
+    norm="layernorm",
+    rope_theta=10_000.0,
+    frontend="audio",
+    num_codebooks=4,
+    fsdp=True,
+    remat="full",
+    grad_accum=8,
+))

@@ -1,0 +1,29 @@
+"""recurrentgemma-2b: RG-LRU + local-attention hybrid (Griffin), 1 attn : 2 rec.
+
+[arXiv:2402.19427; hf]  O(1) recurrent state + 2k-window MQA -> runs the
+long_500k cell.
+"""
+from repro.configs.base import ArchConfig, register
+
+register(ArchConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    num_layers=26,
+    d_model=2560,
+    num_heads=10,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256000,
+    block_cycle=("rg", "rg", "local"),
+    window_size=2048,
+    lru_width=2560,
+    conv_width=4,
+    mlp_variant="geglu",
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    supports_long_context=True,
+    fsdp=True,
+    remat="full",
+    grad_accum=8,
+))

@@ -1,0 +1,24 @@
+"""stablelm-3b: 32L dense MHA (kv=32), LayerNorm+GELU family.
+
+[hf:stabilityai/stablelm-2-1_6b scaled per assignment; unverified]
+"""
+from repro.configs.base import ArchConfig, register
+
+register(ArchConfig(
+    name="stablelm-3b",
+    family="dense",
+    num_layers=32,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=80,
+    d_ff=6912,
+    vocab_size=50304,
+    block_cycle=("dense",),
+    mlp_variant="gelu",
+    norm="layernorm",
+    rope_theta=10_000.0,
+    fsdp=True,
+    remat="full",
+    grad_accum=8,
+))

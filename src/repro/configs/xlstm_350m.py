@@ -1,0 +1,23 @@
+"""xlstm-350m: mLSTM + sLSTM blocks (7:1), O(1) recurrent state.
+
+[arXiv:2405.04517; unverified]  d_ff=0 per assignment: blocks carry their
+own projection factors (mLSTM pf=2, sLSTM pf=4/3), noted in DESIGN.md.
+"""
+from repro.configs.base import ArchConfig, register
+
+register(ArchConfig(
+    name="xlstm-350m",
+    family="ssm",
+    num_layers=24,
+    d_model=1024,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=256,
+    d_ff=0,
+    vocab_size=50304,
+    block_cycle=("mlstm",) * 7 + ("slstm",),
+    norm="layernorm",
+    supports_long_context=True,
+    remat="full",
+    grad_accum=8,
+))

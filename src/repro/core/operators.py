@@ -1,0 +1,141 @@
+"""Soft sorting and ranking operators (paper Eq. 5-6) and derived top-k.
+
+Conventions follow the paper: the *descending* direction is primitive;
+`rho = (n, n-1, ..., 1)`; rank 1 is assigned to the largest entry under the
+descending direction.  All operators act on the last axis and accept
+arbitrary leading batch dimensions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.projection import projection_permutahedron
+
+Array = jax.Array
+
+_DIRECTIONS = ("ASCENDING", "DESCENDING")
+
+
+def _rho(n: int, dtype) -> Array:
+  return jnp.arange(n, 0, -1, dtype=dtype)
+
+
+def soft_sort(
+    values: Array,
+    regularization_strength: float = 1.0,
+    regularization: str = "l2",
+    direction: str = "DESCENDING",
+) -> Array:
+  """Soft sort s_{eps*Psi}(theta) = P_Psi(rho/eps, theta)  (paper Eq. 5)."""
+  if direction not in _DIRECTIONS:
+    raise ValueError(f"direction must be one of {_DIRECTIONS}")
+  values = jnp.asarray(values)
+  if direction == "ASCENDING":
+    return -soft_sort(-values, regularization_strength, regularization)
+  eps = regularization_strength
+  n = values.shape[-1]
+  z = _rho(n, values.dtype) / eps
+  z = jnp.broadcast_to(z, values.shape)
+  return projection_permutahedron(z, values, regularization)
+
+
+def soft_rank(
+    values: Array,
+    regularization_strength: float = 1.0,
+    regularization: str = "l2",
+    direction: str = "DESCENDING",
+) -> Array:
+  """Soft rank r_{eps*Psi}(theta) = P_Psi(-theta/eps, rho)  (paper Eq. 6).
+
+  DESCENDING (paper default): rank 1 for the largest value.
+  ASCENDING: rank 1 for the smallest value ( = descending rank of -theta ).
+  """
+  if direction not in _DIRECTIONS:
+    raise ValueError(f"direction must be one of {_DIRECTIONS}")
+  values = jnp.asarray(values)
+  if direction == "ASCENDING":
+    return soft_rank(-values, regularization_strength, regularization)
+  eps = regularization_strength
+  n = values.shape[-1]
+  w = _rho(n, values.dtype)
+  return projection_permutahedron(-values / eps, w, regularization)
+
+
+def soft_rank_kl_direct(
+    values: Array, regularization_strength: float = 1.0) -> Array:
+  """Appendix variant r~_E: KL projection directly onto P(rho) (not P(e^rho)).
+
+  r~_{eps E}(theta) = exp(P_E(-theta/eps, log rho)).
+  """
+  values = jnp.asarray(values)
+  eps = regularization_strength
+  n = values.shape[-1]
+  w = jnp.log(_rho(n, values.dtype))
+  return jnp.exp(projection_permutahedron(-values / eps, w, "kl"))
+
+
+def soft_topk_mask(
+    values: Array,
+    k: int,
+    regularization_strength: float = 1.0,
+    regularization: str = "l2",
+    impl: str | None = None,
+) -> Array:
+  """Differentiable top-k indicator in [0, 1]^n summing to k.
+
+  Projection of theta/eps onto P(w) with w = (1,...,1,0,...,0) (k ones): the
+  vertices of that permutahedron are exactly the 0/1 indicators of
+  k-subsets, so the projection is the canonical soft top-k selector built
+  from the paper's machinery (cf. §6.1's O(n log k) remark).
+  """
+  values = jnp.asarray(values)
+  eps = regularization_strength
+  n = values.shape[-1]
+  w = jnp.concatenate([
+      jnp.ones((k,), values.dtype),
+      jnp.zeros((n - k,), values.dtype),
+  ])
+  return projection_permutahedron(values / eps, w, regularization, impl)
+
+
+def soft_quantile(
+    values: Array,
+    q: float,
+    regularization_strength: float = 0.1,
+    regularization: str = "l2",
+) -> Array:
+  """Differentiable q-quantile via the soft sort (ascending)."""
+  values = jnp.asarray(values)
+  n = values.shape[-1]
+  s = soft_sort(values, regularization_strength, regularization,
+                direction="ASCENDING")
+  idx = jnp.clip(jnp.asarray(round(q * (n - 1)), jnp.int32), 0, n - 1)
+  return s[..., idx]
+
+
+# ---------------------------------------------------------------------------
+# Exact-regime thresholds (paper Lemma 3) -- used by tests and EXPERIMENTS.md
+# to validate the asymptotic claims *exactly* rather than approximately.
+# ---------------------------------------------------------------------------
+
+
+def eps_min(s: Array, w: Array) -> Array:
+  """Largest eps at which P_Psi(z/eps, w) equals the hard operator.
+
+  `s` must be sorted descending (s = z_sigma(z)); `w` sorted descending.
+  For eps <= eps_min the soft operator is exactly hard (Lemma 3).
+  """
+  ds = s[..., :-1] - s[..., 1:]
+  dw = w[..., :-1] - w[..., 1:]
+  return jnp.min(ds / dw, axis=-1)
+
+
+def eps_max(s: Array, w: Array) -> Array:
+  """Smallest eps beyond which the solution is the closed-form constant."""
+  n = s.shape[-1]
+  i, j = jnp.triu_indices(n, k=1)
+  num = s[..., i] - s[..., j]
+  den = w[..., i] - w[..., j]
+  return jnp.max(num / den, axis=-1)

@@ -1,0 +1,55 @@
+"""Sorting helpers that are safe to differentiate in this environment.
+
+This jax build carries an old-style ``GatherDimensionNumbers`` (no
+``operand_batching_dims``) while ``_sort_jvp`` passes the new kwargs, so any
+attempt to differentiate through ``lax.sort`` / ``jnp.sort`` / ``argsort``
+raises.  The a.e.-correct gradient of sorting is "apply the (locally
+constant) permutation to the cotangent", so we compute permutations under
+``stop_gradient`` and apply them with plain gathers — mathematically
+identical to sort's own JVP rule, and robust here.  (Documented in
+DESIGN.md §10.)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+
+
+def argsort_descending(x: Array, axis: int = -1) -> Array:
+  """Non-differentiable descending argsort (stable)."""
+  return jnp.argsort(-lax.stop_gradient(x), axis=axis, stable=True)
+
+
+def argsort_ascending(x: Array, axis: int = -1) -> Array:
+  return jnp.argsort(lax.stop_gradient(x), axis=axis, stable=True)
+
+
+def sort_descending(x: Array) -> tuple[Array, Array]:
+  """Differentiable descending sort along the last axis.
+
+  Returns (sorted values, permutation sigma) with gradient flowing through
+  the gather (the exact a.e. Jacobian of sorting: the permutation matrix).
+  """
+  sigma = argsort_descending(x)
+  return jnp.take_along_axis(x, sigma, axis=-1), sigma
+
+
+def inverse_permutation(sigma: Array) -> Array:
+  """sigma^{-1} along the last axis."""
+  n = sigma.shape[-1]
+  iota = jnp.broadcast_to(jnp.arange(n, dtype=sigma.dtype), sigma.shape)
+  out = jnp.zeros_like(sigma)
+  return jnp.put_along_axis(out, sigma, iota, axis=-1, inplace=False)
+
+
+def apply_inverse_permutation(v: Array, sigma: Array) -> Array:
+  """Compute v_{sigma^{-1}} (paper notation) differentiably.
+
+  out[sigma_k] = v_k — a scatter whose transpose is the matching gather.
+  """
+  out = jnp.zeros_like(v)
+  return jnp.put_along_axis(out, sigma, v, axis=-1, inplace=False)

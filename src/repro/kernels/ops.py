@@ -1,0 +1,15 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``repro.core.isotonic`` routes its batched forward passes here when
+``set_default_impl('pallas')`` is active; the custom VJPs in core are shared
+(the backward is implementation-independent segment algebra).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.pav import pav_kl, pav_l2
+from repro.kernels.soft_topk import soft_topk_gates
+
+__all__ = ["pav_l2", "pav_kl", "soft_topk_gates"]

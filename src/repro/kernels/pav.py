@@ -1,0 +1,190 @@
+"""Pallas TPU kernel: batched Pool-Adjacent-Violators (isotonic optimization).
+
+TPU adaptation of the paper's §5 solver (see DESIGN.md §3): PAV is a
+sequential, data-dependent stack machine — hostile to a 8x128 vector unit —
+but every framework use-case is *batched* (rows = tokens / examples / loss
+vectors).  The kernel therefore:
+
+  * tiles rows into VMEM blocks (grid over row-tiles, BlockSpec (R, N));
+  * runs the position loop once per tile with ALL rows advanced lane-wise:
+    per-row stack tops are vectors, pops are masked vector selects, and the
+    inner merge loop runs until every row in the tile has no violation
+    (amortized O(n) per row, worst-case convoying bounded by the tile size);
+  * expands block values back to positions with a second O(n) pointer sweep.
+
+Both the quadratic (Eq. 7) and entropic (Eq. 8) block aggregates are
+supported; the entropic variant tracks per-block log-sum-exps and merges
+with logaddexp so it is exactly as stable as the reference.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+DEFAULT_ROW_TILE = 8
+
+
+def _take(arr: Array, idx: Array) -> Array:
+  """arr: (R, N), idx: (R,) -> (R,) gather along axis 1 (clipped)."""
+  idx = jnp.clip(idx, 0, arr.shape[1] - 1)
+  return jnp.take_along_axis(arr, idx[:, None], axis=1)[:, 0]
+
+
+def _put(arr: Array, idx: Array, val: Array) -> Array:
+  return jnp.put_along_axis(
+      arr, jnp.clip(idx, 0, arr.shape[1] - 1)[:, None], val[:, None],
+      axis=1, inplace=False)
+
+
+def _pav_body(y_like, init_cur, merge, block_value):
+  """Shared stack machine. `y_like` drives shapes; callbacks define the
+  aggregate algebra:
+
+    init_cur(i)       -> tuple of (R,) registers for the singleton block {i}
+    merge(cur, popped) -> merged registers
+    block_value(regs) -> (R,) gamma value of a block
+
+  Returns (starts (R,N), values (R,N), top (R,)).
+  """
+  r, n = y_like.shape
+  num_regs = len(init_cur(0))
+  regs0 = tuple(jnp.zeros((r, n), jnp.float32) for _ in range(num_regs))
+  starts0 = jnp.zeros((r, n), jnp.int32)
+  top0 = jnp.full((r,), -1, jnp.int32)
+
+  def push(i, state):
+    regs, starts, top = state
+    cur = init_cur(i)
+    cur_start = jnp.full((r,), i, jnp.int32)
+
+    def violation(c):
+      cur, cur_start, top = c
+      top_regs = tuple(_take(a, top) for a in regs)
+      return (top >= 0) & (
+          block_value(top_regs) <= block_value(cur))
+
+    def any_violation(c):
+      return jnp.any(violation(c))
+
+    def pop(c):
+      cur, cur_start, top = c
+      act = violation(c)
+      top_regs = tuple(_take(a, top) for a in regs)
+      merged = merge(cur, top_regs)
+      cur = tuple(jnp.where(act, m, c_) for m, c_ in zip(merged, cur))
+      cur_start = jnp.where(act, _take(starts, top), cur_start)
+      top = jnp.where(act, top - 1, top)
+      return cur, cur_start, top
+
+    cur, cur_start, top = lax.while_loop(
+        any_violation, pop, (cur, cur_start, top))
+    top = top + 1
+    regs = tuple(_put(a, top, v) for a, v in zip(regs, cur))
+    starts = _put(starts, top, cur_start)
+    return regs, starts, top
+
+  regs, starts, top = lax.fori_loop(0, n, push, (regs0, starts0, top0))
+  # Per-slot block values.
+  vals = block_value(regs)  # elementwise over (R, N) slots
+  return starts, vals, top
+
+
+def _expand(starts: Array, vals: Array, top: Array, n: int) -> Array:
+  """Blocks -> positions: O(n) pointer sweep (per-row current block slot)."""
+  r = starts.shape[0]
+
+  def step(p, carry):
+    cur, out = carry
+    nxt = _take(starts, cur + 1)
+    adv = ((cur + 1) <= top) & (nxt == p)
+    cur = jnp.where(adv, cur + 1, cur)
+    col = _take(vals, cur)
+    out = lax.dynamic_update_slice(out, col[:, None], (0, p))
+    return cur, out
+
+  cur0 = jnp.zeros((r,), jnp.int32)
+  out0 = jnp.zeros((r, n), jnp.float32)
+  _, out = lax.fori_loop(0, n, step, (cur0, out0))
+  return out
+
+
+def _pav_l2_kernel(y_ref, o_ref):
+  y = y_ref[...].astype(jnp.float32)
+  n = y.shape[1]
+
+  starts, vals, top = _pav_body(
+      y,
+      init_cur=lambda i: (y[:, i], jnp.ones((y.shape[0],), jnp.float32)),
+      merge=lambda cur, pop: (cur[0] + pop[0], cur[1] + pop[1]),
+      block_value=lambda regs: regs[0] / jnp.maximum(regs[1], 1e-30),
+  )
+  o_ref[...] = _expand(starts, vals, top, n).astype(o_ref.dtype)
+
+
+def _pav_kl_kernel(s_ref, w_ref, o_ref):
+  s = s_ref[...].astype(jnp.float32)
+  w = w_ref[...].astype(jnp.float32)
+  n = s.shape[1]
+
+  starts, vals, top = _pav_body(
+      s,
+      init_cur=lambda i: (s[:, i], w[:, i]),
+      merge=lambda cur, pop: (jnp.logaddexp(cur[0], pop[0]),
+                              jnp.logaddexp(cur[1], pop[1])),
+      block_value=lambda regs: regs[0] - regs[1],
+  )
+  o_ref[...] = _expand(starts, vals, top, n).astype(o_ref.dtype)
+
+
+def _call(kernel, args, row_tile: int, interpret: bool) -> Array:
+  b, n = args[0].shape
+  grid = (b // row_tile,)
+  spec = pl.BlockSpec((row_tile, n), lambda i: (i, 0))
+  return pl.pallas_call(
+      kernel,
+      out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+      grid=grid,
+      in_specs=[spec] * len(args),
+      out_specs=spec,
+      interpret=interpret,
+  )(*args)
+
+
+def _pad_rows(x: Array, row_tile: int) -> tuple[Array, int]:
+  b = x.shape[0]
+  pad = (-b) % row_tile
+  if pad:
+    x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], 0)
+  return x, b
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile", "interpret"))
+def pav_l2(y: Array, *, row_tile: int = DEFAULT_ROW_TILE,
+           interpret: bool | None = None) -> Array:
+  """Batched isotonic regression (non-increasing), y: (B, N) -> (B, N)."""
+  if interpret is None:
+    interpret = jax.default_backend() != "tpu"
+  y32 = y.astype(jnp.float32)
+  padded, b = _pad_rows(y32, row_tile)
+  out = _call(_pav_l2_kernel, (padded,), row_tile, interpret)
+  return out[:b].astype(y.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile", "interpret"))
+def pav_kl(s: Array, w: Array, *, row_tile: int = DEFAULT_ROW_TILE,
+           interpret: bool | None = None) -> Array:
+  """Batched entropic isotonic optimization, (B, N) x (B, N) -> (B, N)."""
+  if interpret is None:
+    interpret = jax.default_backend() != "tpu"
+  s32, w32 = s.astype(jnp.float32), w.astype(jnp.float32)
+  ps, b = _pad_rows(s32, row_tile)
+  pw, _ = _pad_rows(w32, row_tile)
+  out = _call(_pav_kl_kernel, (ps, pw), row_tile, interpret)
+  return out[:b].astype(s.dtype)

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Independent implementations (no shared code with ``repro.core.isotonic`` or
+the kernels) used by tests as ground truth:
+
+* ``pav_l2_ref`` / ``pav_kl_ref``: the minimax characterization of isotonic
+  regression,  v_i = min_{j<=i} max_{k>=i} gamma(y[j..k]),  vectorized as an
+  O(n^2) interval-aggregate matrix.  Exact (same minimizer as PAV).
+* ``soft_topk_gates_ref``: soft top-k via explicit permutahedron projection
+  composed from the oracles above.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_NEG = -1e30
+
+
+def _minimax(gamma: Array) -> Array:
+  """v_i = min_{j<=i} max_{k>=i} gamma[..., j, k] (valid for j <= k)."""
+  n = gamma.shape[-1]
+  j = jnp.arange(n)[:, None]
+  k = jnp.arange(n)[None, :]
+  g = jnp.where(j <= k, gamma, _NEG)
+  # inner[..., j, i] = max_{k >= i} g[..., j, k]: reverse cummax over k.
+  inner = jnp.flip(
+      jax.lax.cummax(jnp.flip(g, axis=-1), axis=g.ndim - 1), axis=-1)
+  # v_i = min over j <= i of inner[..., j, i].
+  masked = jnp.where(j <= k, inner, -_NEG)
+  return jnp.min(masked, axis=-2)
+
+
+def pav_l2_ref(y: Array) -> Array:
+  """Isotonic regression (non-increasing fit) via minimax. Last axis."""
+  n = y.shape[-1]
+  c = jnp.cumsum(y, axis=-1)
+  c = jnp.concatenate([jnp.zeros_like(c[..., :1]), c], axis=-1)  # (.., n+1)
+  hi = c[..., 1:][..., None, :]          # indexed by k:   (.., 1, n)
+  lo = c[..., :n][..., :, None]          # indexed by j:   (.., n, 1)
+  sums = hi - lo                         # sums[..,j,k] = sum(y[j..k])
+  j = jnp.arange(n)[:, None]
+  k = jnp.arange(n)[None, :]
+  length = jnp.maximum((k - j + 1), 1).astype(y.dtype)
+  return _minimax(sums / length)
+
+
+def pav_kl_ref(s: Array, w: Array) -> Array:
+  """Entropic isotonic optimization via minimax on LSE-difference gammas."""
+  n = s.shape[-1]
+
+  def interval_lse(x: Array) -> Array:
+    m = jnp.max(x, axis=-1, keepdims=True)
+    c = jnp.cumsum(jnp.exp(x - m), axis=-1)
+    c = jnp.concatenate([jnp.zeros_like(c[..., :1]), c], axis=-1)
+    hi = c[..., 1:][..., None, :]
+    lo = c[..., :n][..., :, None]
+    val = jnp.clip(hi - lo, 1e-38, None)
+    return jnp.log(val) + m[..., None]
+
+  gamma = interval_lse(s) - interval_lse(w)
+  return _minimax(gamma)
+
+
+def soft_topk_gates_ref(
+    logits: Array, k: int, regularization_strength: float = 1.0) -> Array:
+  """Oracle for the fused router kernel: projection of logits/eps onto the
+  k-subset permutahedron, composed from pav_l2_ref."""
+  z = logits / regularization_strength
+  n = z.shape[-1]
+  w = jnp.concatenate(
+      [jnp.ones((k,), z.dtype), jnp.zeros((n - k,), z.dtype)])
+  sigma = jnp.argsort(-z, axis=-1, stable=True)
+  s = jnp.take_along_axis(z, sigma, axis=-1)
+  v = pav_l2_ref(s - jnp.broadcast_to(w, s.shape))
+  out = jnp.zeros_like(v)
+  out = jnp.put_along_axis(out, sigma, v, axis=-1, inplace=False)
+  return z - out

@@ -1,0 +1,27 @@
+"""Production mesh construction (assignment-pinned shapes).
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (device count is locked at first jax init, and
+only ``dryrun.py`` forces the 512-device host platform).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+  shape = (2, 16, 16) if multi_pod else (16, 16)
+  axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+  return jax.make_mesh(
+      shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(shape=(2, 4), axes=("data", "model")):
+  """Small mesh for CPU tests (requires >= prod(shape) host devices)."""
+  return jax.make_mesh(
+      shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def data_axes_of(mesh) -> tuple[str, ...]:
+  return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,94 @@
+"""Batched serving driver: prefill + greedy decode loop.
+
+Serves a (reduced or full) architecture with batched requests: prefill the
+prompt batch once, then decode tokens autoregressively with a uniform
+position counter (continuous batching with per-row lengths is a documented
+extension — the cache layout already supports per-row fill levels).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.data.pipeline import pipeline_for_arch
+from repro.launch import steps as ST
+from repro.launch.dryrun import parse_overrides
+from repro.models import transformer as T
+
+
+def greedy(logits):
+  if logits.ndim == 3:   # audio codebook heads (B, K, V)
+    return jnp.argmax(logits, -1)
+  return jnp.argmax(logits, -1)
+
+
+def main():
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--arch", required=True)
+  ap.add_argument("--smoke", action="store_true")
+  ap.add_argument("--batch", type=int, default=4)
+  ap.add_argument("--prompt-len", type=int, default=32)
+  ap.add_argument("--gen", type=int, default=16)
+  ap.add_argument("--set", action="append", dest="overrides")
+  args = ap.parse_args()
+
+  if args.smoke:
+    from repro.configs.smoke import smoke_config
+    cfg = smoke_config(args.arch)
+  else:
+    cfg = get_config(args.arch)
+  over = parse_overrides(args.overrides)
+  if over:
+    cfg = dataclasses.replace(cfg, **over)
+  if cfg.frontend == "audio":
+    raise SystemExit("audio decode takes frame embeddings; use the "
+                     "examples/ drivers for musicgen")
+
+  max_len = args.prompt_len + args.gen
+  params = T.init_params(cfg, jax.random.PRNGKey(0))
+  pipe = pipeline_for_arch(cfg, args.batch, args.prompt_len)
+  batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()
+           if k in ("tokens", "image_embeds")}
+
+  prefill = jax.jit(ST.make_prefill_step(cfg, max_len))
+  decode = jax.jit(ST.make_decode_step(cfg))
+
+  t0 = time.time()
+  logits, caches = prefill(params, batch)
+  jax.block_until_ready(logits)
+  t_prefill = time.time() - t0
+
+  pos0 = args.prompt_len + (cfg.num_patches if cfg.frontend == "vision"
+                            else 0)
+  tok = greedy(logits)
+  out_tokens = [np.asarray(tok)]
+  t0 = time.time()
+  for i in range(args.gen - 1):
+    logits, caches = decode(params, caches, tok, jnp.int32(pos0 + i))
+    tok = greedy(logits)
+    out_tokens.append(np.asarray(tok))
+  jax.block_until_ready(logits)
+  t_decode = time.time() - t0
+
+  gen = np.stack(out_tokens, axis=1)
+  print(f"[serve] prefill {args.batch}x{args.prompt_len} in "
+        f"{t_prefill*1e3:.0f} ms; {args.gen - 1} decode steps in "
+        f"{t_decode*1e3:.0f} ms "
+        f"({(args.gen - 1) * args.batch / max(t_decode, 1e-9):.1f} tok/s)")
+  print("[serve] sample generations (first 2 rows):")
+  for row in gen[:2]:
+    print("  ", row.reshape(row.shape[0], -1)[:, 0].tolist())
+
+
+if __name__ == "__main__":
+  main()

@@ -1,0 +1,84 @@
+"""Assigned input-shape cells and ShapeDtypeStruct stand-ins.
+
+Four shapes per LM architecture (40 cells total):
+  train_4k     seq 4096,   global_batch 256   -> train_step
+  prefill_32k  seq 32768,  global_batch 32    -> serve_prefill
+  decode_32k   seq 32768,  global_batch 128   -> serve_decode (1 new token)
+  long_500k    seq 524288, global_batch 1     -> serve_decode; only for
+               sub-quadratic archs (cfg.supports_long_context), others are
+               recorded as skipped (DESIGN.md §6).
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs — no host or
+device allocation ever happens for the full-size cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+  name: str
+  seq_len: int
+  global_batch: int
+  kind: str                  # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_applicable(cfg, shape: ShapeCell) -> tuple[bool, str]:
+  if shape.name == "long_500k" and not cfg.supports_long_context:
+    return False, ("pure full-attention arch: 500k-token decode needs "
+                   "sub-quadratic attention (skip per assignment)")
+  return True, ""
+
+
+def batch_specs(cfg, shape: ShapeCell) -> dict[str, Any]:
+  """ShapeDtypeStructs for the train/prefill batch dict."""
+  b, s = shape.global_batch, shape.seq_len
+  i32 = jnp.int32
+  if cfg.frontend == "audio":
+    specs = {"embeds": SDS((b, s, cfg.d_model), jnp.float32)}
+    if shape.kind == "train":
+      specs["targets"] = SDS((b, s, cfg.num_codebooks), i32)
+    return specs
+  if cfg.frontend == "vision":
+    st = s - cfg.num_patches
+    specs = {
+        "tokens": SDS((b, st), i32),
+        "image_embeds": SDS((b, cfg.num_patches, cfg.d_model), jnp.float32),
+    }
+    if shape.kind == "train":
+      specs["targets"] = SDS((b, st), i32)
+    return specs
+  specs = {"tokens": SDS((b, s), i32)}
+  if shape.kind == "train":
+    specs["targets"] = SDS((b, s), i32)
+  return specs
+
+
+def decode_token_specs(cfg, shape: ShapeCell) -> Any:
+  b = shape.global_batch
+  if cfg.frontend == "audio":
+    return SDS((b, cfg.d_model), jnp.float32)
+  return SDS((b,), jnp.int32)
+
+
+def cache_specs(cfg, shape: ShapeCell) -> Any:
+  """ShapeDtypeStruct pytree for the decode cache at seq_len fill."""
+  from repro.models import transformer as T
+  return jax.eval_shape(
+      lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len))

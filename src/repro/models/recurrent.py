@@ -1,0 +1,125 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Temporal mixing:  y = W_out( GeLU(W_gate x) * RGLRU(conv1d(W_x x)) )
+
+RG-LRU recurrence (diagonal, gated):
+  r_t = sigmoid(W_r x_t);  i_t = sigmoid(W_i x_t)
+  log a_t = -c * softplus(Lambda) * r_t           (c = 8)
+  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses ``jax.lax.associative_scan`` over the sequence (parallel
+prefix — the TPU-native way to run linear recurrences, log-depth instead of
+S sequential steps).  Decode keeps (h, last conv_width-1 inputs) as state:
+O(1) per token — this is what qualifies the arch for the 500k cell.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.sharding.specs import shard_activation
+
+Array = jax.Array
+Params = dict[str, Any]
+
+_C = 8.0
+
+
+def rg_init(key, cfg, dtype) -> Params:
+  d, l = cfg.d_model, cfg.lru_width or cfg.d_model
+  ks = jax.random.split(key, 7)
+  si = 1.0 / math.sqrt(d)
+  sl = 1.0 / math.sqrt(l)
+  # Lambda init so that a ~ Uniform(0.9, 0.999)^c-ish (Griffin appendix).
+  u = jax.random.uniform(ks[0], (l,), minval=0.9, maxval=0.999)
+  a_param = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^{-1}(-log u / c)
+  return {
+      "w_x": (jax.random.normal(ks[1], (d, l)) * si).astype(dtype),
+      "w_gate": (jax.random.normal(ks[2], (d, l)) * si).astype(dtype),
+      "w_out": (jax.random.normal(ks[3], (l, d)) * sl).astype(dtype),
+      "a_param": a_param.astype(jnp.float32),
+      "gate_w_r": (jax.random.normal(ks[4], (d, l)) * si).astype(dtype),
+      "gate_w_i": (jax.random.normal(ks[5], (d, l)) * si).astype(dtype),
+      "conv_w": (jax.random.normal(ks[6], (cfg.conv_width, l)) *
+                 (1.0 / math.sqrt(cfg.conv_width))).astype(dtype),
+  }
+
+
+def _conv1d_causal(x: Array, w: Array) -> Array:
+  """Depthwise causal conv, x: (B,S,L), w: (W,L) — small W, tap-sum form."""
+  width = w.shape[0]
+  out = x * w[width - 1]
+  for i in range(1, width):
+    shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+    out = out + shifted * w[width - 1 - i]
+  return out
+
+
+def _rglru_gates(p: Params, x_raw: Array, u: Array):
+  """Gate computations shared by scan/step. x_raw: pre-conv input for gates;
+  u: conv output entering the recurrence."""
+  r = jax.nn.sigmoid(
+      jnp.einsum("...d,dl->...l", x_raw, p["gate_w_r"]).astype(jnp.float32))
+  i = jax.nn.sigmoid(
+      jnp.einsum("...d,dl->...l", x_raw, p["gate_w_i"]).astype(jnp.float32))
+  log_a = -_C * jax.nn.softplus(p["a_param"]) * r
+  a = jnp.exp(log_a)
+  gated = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-9, 1.0)) * (
+      i * u.astype(jnp.float32))
+  return a, gated
+
+
+def rg_apply_seq(p: Params, x: Array, cfg, *, return_state: bool = False):
+  """Full-sequence RG-LRU block. x: (B,S,d)."""
+  xb = jnp.einsum("bsd,dl->bsl", x, p["w_x"])
+  gate = jax.nn.gelu(
+      jnp.einsum("bsd,dl->bsl", x, p["w_gate"]), approximate=True)
+  u = _conv1d_causal(xb, p["conv_w"])
+  a, gated = _rglru_gates(p, x, u)
+
+  def combine(c1, c2):
+    a1, b1 = c1
+    a2, b2 = c2
+    return a1 * a2, a2 * b1 + b2
+
+  a_s, h = lax.associative_scan(combine, (a, gated), axis=1)
+  h = shard_activation(h.astype(x.dtype), "residual")
+  y = jnp.einsum("bsl,ld->bsd", gate * h.astype(gate.dtype), p["w_out"])
+  if return_state:
+    state = {
+        "h": h[:, -1].astype(jnp.float32),
+        "conv": xb[:, -(cfg.conv_width - 1):].astype(jnp.float32),
+    }
+    return y, state
+  return y
+
+
+def rg_init_state(cfg, batch: int, dtype) -> Params:
+  l = cfg.lru_width or cfg.d_model
+  return {
+      "h": jnp.zeros((batch, l), jnp.float32),
+      "conv": jnp.zeros((batch, cfg.conv_width - 1, l), jnp.float32),
+  }
+
+
+def rg_apply_decode(p: Params, x: Array, state: Params, cfg):
+  """One-token step. x: (B,d); state: {h (B,L), conv (B,W-1,L)}."""
+  xb = jnp.einsum("bd,dl->bl", x, p["w_x"])
+  gate = jax.nn.gelu(
+      jnp.einsum("bd,dl->bl", x, p["w_gate"]), approximate=True)
+  width = cfg.conv_width
+  hist = jnp.concatenate(
+      [state["conv"], xb[:, None].astype(jnp.float32)], axis=1)  # (B,W,L)
+  u = jnp.einsum("bwl,wl->bl", hist, p["conv_w"].astype(jnp.float32))
+  a, gated = _rglru_gates(p, x, u)
+  h = a * state["h"] + gated
+  h = shard_activation(h, "rg_state")
+  y = jnp.einsum("bl,ld->bd", (gate.astype(jnp.float32) * h).astype(x.dtype),
+                 p["w_out"])
+  new_state = {"h": h, "conv": hist[:, 1:]}
+  return y, new_state

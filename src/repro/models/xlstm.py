@@ -1,0 +1,357 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential).
+
+mLSTM training runs in the stabilized parallel form with the same q-block /
+kv-block chunking skeleton as flash attention (decay-biased logits, running
+max), so the (S x S) weight matrix never materializes; decode keeps the
+(C, n, m) recurrent state: O(1) per token -> qualifies for the 500k cell.
+sLSTM has a genuine hidden-to-hidden nonlinearity, so training scans
+sequentially (``lax.scan``) — the honest cost of that block type.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.sharding.specs import shard_activation
+
+Array = jax.Array
+Params = dict[str, Any]
+
+_NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg, dtype) -> Params:
+  d, h, dh = cfg.d_model, cfg.num_heads, cfg.head_dim
+  ks = jax.random.split(key, 7)
+  si = 1.0 / math.sqrt(d)
+  return {
+      "w_q": (jax.random.normal(ks[0], (d, h, dh)) * si).astype(dtype),
+      "w_k": (jax.random.normal(ks[1], (d, h, dh)) * si).astype(dtype),
+      "w_v": (jax.random.normal(ks[2], (d, h, dh)) * si).astype(dtype),
+      "w_i": (jax.random.normal(ks[3], (d, h)) * si).astype(jnp.float32),
+      "w_f": (jax.random.normal(ks[4], (d, h)) * si).astype(jnp.float32),
+      "b_f": jnp.full((h,), 3.0, jnp.float32),  # open forget gates at init
+      "w_o": (jax.random.normal(ks[5], (d, h, dh)) * si).astype(dtype),
+      "w_out": (jax.random.normal(ks[6], (h, dh, d)) *
+                (1.0 / math.sqrt(h * dh))).astype(dtype),
+  }
+
+
+def mlstm_apply_seq(p: Params, x: Array, cfg, *, return_state: bool = False):
+  """Stabilized parallel mLSTM. x: (B,S,d) -> (B,S,d).
+
+  logits_{t,j} = (q_t . k_j)/sqrt(dh) + F_t - F_j + itilde_j  (j <= t),
+  F_t = cumsum(log sigmoid(ftilde)); output normalized by
+  max(|sum_j w|, exp(-m)) per the xLSTM stabilization.
+  """
+  b, s, d = x.shape
+  h, dh = cfg.num_heads, cfg.head_dim
+  q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"]) / math.sqrt(dh)
+  k = jnp.einsum("bsd,dhk->bshk", x, p["w_k"])
+  v = jnp.einsum("bsd,dhk->bshk", x, p["w_v"])
+  q = shard_activation(q, "heads")
+  i_t = jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["w_i"])
+  f_t = jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["w_f"]) + p["b_f"]
+  log_f = jax.nn.log_sigmoid(f_t)
+  f_cum = jnp.cumsum(log_f, axis=1)                       # (B,S,H)
+
+  qc = min(cfg.q_chunk, s)
+  kc = min(cfg.kv_chunk, s)
+  while s % qc:
+    qc -= 1
+  while s % kc:
+    kc -= 1
+  nq, nkv = s // qc, s // kc
+
+  def one_q_block(qi, q_blk, fq_blk):
+    # q_blk: (B,cq,H,dh); fq_blk: (B,cq,H)
+    m0 = jnp.full((b, h, qc), _NEG, jnp.float32)
+    num0 = jnp.zeros((b, h, qc, dh), jnp.float32)
+    den0 = jnp.zeros((b, h, qc), jnp.float32)
+    q_pos = qi * qc + jnp.arange(qc)
+
+    def body(carry, j):
+      m, num, den = carry
+      k_blk = lax.dynamic_slice_in_dim(k, j * kc, kc, 1)
+      v_blk = lax.dynamic_slice_in_dim(v, j * kc, kc, 1)
+      fk_blk = lax.dynamic_slice_in_dim(f_cum, j * kc, kc, 1)
+      ik_blk = lax.dynamic_slice_in_dim(i_t, j * kc, kc, 1)
+      # mLSTM is *linear* in the q.k score; only gate decays are in the
+      # exponent:  w_{t,j} = exp(F_t - F_j + itilde_j - m_t) * (q_t . k_j).
+      # (§Perf iter 5 tried bf16 block tensors here: REFUTED on this
+      # backend — XLA:CPU has no native bf16, so every cast materializes a
+      # block-sized convert and traffic grew 30%.  Revisit on real TPU.)
+      score = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_blk).astype(jnp.float32)
+      decay = (fq_blk.transpose(0, 2, 1)[..., None]
+               - fk_blk.transpose(0, 2, 1)[:, :, None, :]
+               + ik_blk.transpose(0, 2, 1)[:, :, None, :])
+      kv_pos = j * kc + jnp.arange(kc)
+      mask = kv_pos[None, :] <= q_pos[:, None]
+      decay = jnp.where(mask[None, None], decay, _NEG)
+      m_new = jnp.maximum(m, jnp.max(decay, axis=-1))
+      alpha = jnp.exp(m - m_new)
+      w = jnp.exp(decay - m_new[..., None]) * score
+      num = num * alpha[..., None] + jnp.einsum(
+          "bhqk,bkhd->bhqd", w, v_blk.astype(jnp.float32))
+      den = den * alpha + jnp.sum(w, axis=-1)
+      return (m_new, num, den), None
+
+    (m, num, den), _ = lax.scan(body, (m0, num0, den0), jnp.arange(nkv))
+    norm = jnp.maximum(jnp.abs(den), jnp.exp(-m))
+    out = num / norm[..., None]
+    return out.transpose(0, 2, 1, 3)  # (B,cq,H,dh)
+
+  qs = q.reshape(b, nq, qc, h, dh).transpose(1, 0, 2, 3, 4)
+  fqs = f_cum.reshape(b, nq, qc, h).transpose(1, 0, 2, 3)
+  if nq == 1:
+    o = one_q_block(0, qs[0], fqs[0])
+  else:
+    o = lax.map(lambda a: one_q_block(a[0], a[1], a[2]),
+                (jnp.arange(nq), qs, fqs))
+    o = o.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dh)
+  o = o.reshape(b, s, h, dh)
+
+  og = jax.nn.sigmoid(jnp.einsum("bsd,dhk->bshk", x, p["w_o"]))
+  y = jnp.einsum("bshk,hkd->bsd", (og * o.astype(og.dtype)), p["w_out"])
+
+  if return_state:
+    # Recurrent state equivalent to having consumed the whole sequence.
+    state = mlstm_init_state(cfg, b)
+    state = _mlstm_state_from_seq(state, k, v, i_t, f_cum)
+    return y, state
+  return y
+
+
+def _mlstm_state_from_seq(state, k, v, i_t, f_cum):
+  """Fold a full sequence into (C, n, m) in one pass (for prefill)."""
+  f_last = f_cum[:, -1][:, :, None]                      # (B,H,1)
+  logw = (f_last - f_cum.transpose(0, 2, 1)
+          + i_t.transpose(0, 2, 1))                      # (B,H,S)
+  m = jnp.max(logw, axis=-1)                             # (B,H)
+  w = jnp.exp(logw - m[..., None])
+  c = jnp.einsum("bhs,bshk,bshv->bhkv", w,
+                 k.astype(jnp.float32), v.astype(jnp.float32))
+  n = jnp.einsum("bhs,bshk->bhk", w, k.astype(jnp.float32))
+  return {"c": c, "n": n, "m": m}
+
+
+def mlstm_init_state(cfg, batch: int) -> Params:
+  h, dh = cfg.num_heads, cfg.head_dim
+  return {
+      "c": jnp.zeros((batch, h, dh, dh), jnp.float32),
+      "n": jnp.zeros((batch, h, dh), jnp.float32),
+      "m": jnp.full((batch, h), _NEG, jnp.float32),
+  }
+
+
+def mlstm_apply_decode(p: Params, x: Array, state: Params, cfg):
+  """One-token recurrent step. x: (B,d)."""
+  h, dh = cfg.num_heads, cfg.head_dim
+  q = jnp.einsum("bd,dhk->bhk", x, p["w_q"]).astype(jnp.float32) / math.sqrt(dh)
+  k = jnp.einsum("bd,dhk->bhk", x, p["w_k"]).astype(jnp.float32)
+  v = jnp.einsum("bd,dhk->bhk", x, p["w_v"]).astype(jnp.float32)
+  i_t = jnp.einsum("bd,dh->bh", x.astype(jnp.float32), p["w_i"])
+  f_t = jnp.einsum("bd,dh->bh", x.astype(jnp.float32), p["w_f"]) + p["b_f"]
+  log_f = jax.nn.log_sigmoid(f_t)
+
+  m_new = jnp.maximum(state["m"] + log_f, i_t)
+  a = jnp.exp(state["m"] + log_f - m_new)
+  bgt = jnp.exp(i_t - m_new)
+  c = state["c"] * a[..., None, None] + bgt[..., None, None] * (
+      k[..., :, None] * v[..., None, :])
+  n = state["n"] * a[..., None] + bgt[..., None] * k
+  c = shard_activation(c, "mlstm_state")
+  num = jnp.einsum("bhk,bhkv->bhv", q, c)
+  den = jnp.abs(jnp.einsum("bhk,bhk->bh", q, n))
+  out = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+  og = jax.nn.sigmoid(jnp.einsum("bd,dhk->bhk", x, p["w_o"]))
+  y = jnp.einsum("bhk,hkd->bd", og * out.astype(og.dtype), p["w_out"])
+  return y, {"c": c, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg, dtype) -> Params:
+  d = cfg.d_model
+  h, dh = cfg.num_heads, cfg.d_model // cfg.num_heads
+  ks = jax.random.split(key, 3)
+  si = 1.0 / math.sqrt(d)
+  sr = 1.0 / math.sqrt(dh)
+  # 4 gates (i, f, z, o); recurrent weights block-diagonal per head.
+  # Stored in the model dtype (bf16): the recurrence streams `r` from HBM
+  # every timestep, so weight bytes — not flops — bound sLSTM throughput;
+  # gate math still accumulates in f32 (hillclimb iter 2, EXPERIMENTS §Perf).
+  return {
+      "w": (jax.random.normal(ks[0], (d, 4, h, dh)) * si).astype(dtype),
+      "r": (jax.random.normal(ks[1], (h, dh, 4, dh)) * sr).astype(dtype),
+      "b": jnp.zeros((4, h, dh), jnp.float32),
+      "w_out": (jax.random.normal(ks[2], (h, dh, d)) *
+                (1.0 / math.sqrt(d))).astype(dtype),
+  }
+
+
+def slstm_init_state(cfg, batch: int) -> Params:
+  h, dh = cfg.num_heads, cfg.d_model // cfg.num_heads
+  z = jnp.zeros((batch, h, dh), jnp.float32)
+  return {"c": z, "n": z + 1e-6, "m": z - 10.0, "h": z}
+
+
+def _slstm_cell(p: Params, xw: Array, state: Params):
+  """xw: pre-computed input projections (B,4,H,dh)."""
+  rec = jnp.einsum("bhk,hkgv->bghv", state["h"].astype(p["r"].dtype),
+                   p["r"], preferred_element_type=jnp.float32)
+  pre = xw + rec + p["b"]
+  it, ft, zt, ot = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+  log_f = jax.nn.log_sigmoid(ft)
+  m_new = jnp.maximum(state["m"] + log_f, it)
+  a = jnp.exp(state["m"] + log_f - m_new)
+  bgt = jnp.exp(it - m_new)
+  c = state["c"] * a + bgt * jnp.tanh(zt)
+  n = state["n"] * a + bgt
+  hid = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1e-6)
+  return {"c": c, "n": n, "m": m_new, "h": hid}
+
+
+_EPS_N = 1e-6
+
+
+@jax.custom_vjp
+def _slstm_scan(xw, r, bias):
+  """sLSTM recurrence over time with a hand-written backward.
+
+  xw: (S,B,4,H,dh) input projections; r: (H,dh,4,dh) recurrent weights;
+  bias: (4,H,dh).  Returns (hs (S,B,H,dh), final (c,n,m,h)).
+
+  Why custom (hillclimb §Perf, xlstm pair): under autodiff the per-step
+  dL/dr contribution is a rank-4 outer product *and* (with batch sharded
+  over data) a per-step cross-device all-reduce — ~100k collectives per
+  train step.  Here the backward reverse-scan emits per-step gate
+  cotangents (dpre) as ys and computes dL/dr as ONE einsum (one
+  all-reduce) outside the loop.  The stabilizer m is gradient-transparent
+  (h_t is exactly invariant to it — c and n scale identically), matching
+  the xLSTM reference implementation.
+  """
+  hs, state, _ = _slstm_fwd_scan(xw, r, bias)
+  return hs, state
+
+
+def _gates(pre):
+  return pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+
+
+def _slstm_fwd_scan(xw, r, bias):
+  b = xw.shape[1]
+  h_, dh = r.shape[0], r.shape[1]
+  zeros = jnp.zeros((b, h_, dh), jnp.float32)
+  state0 = (zeros, zeros + _EPS_N, zeros - 10.0, zeros)  # c, n, m, h
+
+  def step(state, xw_t):
+    c, n, m, h = state
+    rec = jnp.einsum("bhk,hkgv->bghv", h.astype(r.dtype), r,
+                     preferred_element_type=jnp.float32)
+    pre = xw_t + rec + bias
+    i_p, f_p, z_p, o_p = _gates(pre)
+    log_f = jax.nn.log_sigmoid(f_p)
+    m_new = jnp.maximum(m + log_f, i_p)
+    a = jnp.exp(m + log_f - m_new)
+    bgt = jnp.exp(i_p - m_new)
+    c_new = c * a + bgt * jnp.tanh(z_p)
+    n_new = n * a + bgt
+    h_new = jax.nn.sigmoid(o_p) * c_new / jnp.maximum(n_new, _EPS_N)
+    return (c_new, n_new, m_new, h_new), (h_new, pre, a, c_new, n_new)
+
+  state, ys = lax.scan(step, state0, xw)
+  hs = ys[0]
+  return hs, state, ys
+
+
+def _slstm_scan_fwd(xw, r, bias):
+  hs, state, ys = _slstm_fwd_scan(xw, r, bias)
+  return (hs, state), (r, ys)
+
+
+def _slstm_scan_bwd(saved, cotangents):
+  r, (hs, pres, a_s, c_post, n_post) = saved
+  d_hs, (d_c_fin, d_n_fin, _, d_h_fin) = cotangents
+  r32 = r.astype(jnp.float32)
+
+  def shift_prev(post, init_val):
+    first = jnp.full_like(post[:1], init_val)
+    return jnp.concatenate([first, post[:-1]], axis=0)
+
+  c_prev = shift_prev(c_post, 0.0)
+  n_prev = shift_prev(n_post, _EPS_N)
+  h_prev = shift_prev(hs, 0.0)
+
+  def step(carry, inp):
+    dc, dn, dh_rec = carry
+    d_h_out, pre, a, c_pm1, n_pm1, c_t, n_t = inp
+    i_p, f_p, z_p, o_p = _gates(pre)
+    sig_o = jax.nn.sigmoid(o_p)
+    tanh_z = jnp.tanh(z_p)
+    bgt = n_t - a * n_pm1                       # exact recurrence identity
+    n_cl = jnp.maximum(n_t, _EPS_N)
+
+    dh_total = d_h_out + dh_rec
+    d_o_pre = dh_total * (c_t / n_cl) * sig_o * (1.0 - sig_o)
+    dc_t = dh_total * sig_o / n_cl + dc
+    dn_t = jnp.where(n_t > _EPS_N,
+                     -dh_total * sig_o * c_t / (n_cl * n_cl), 0.0) + dn
+    d_a = dc_t * c_pm1 + dn_t * n_pm1
+    d_bgt = dc_t * tanh_z + dn_t
+    d_z_pre = dc_t * bgt * (1.0 - tanh_z * tanh_z)
+    d_f_pre = a * d_a * jax.nn.sigmoid(-f_p)    # d/dx log_sigmoid = sig(-x)
+    d_i_pre = bgt * d_bgt
+    dpre = jnp.stack([d_i_pre, d_f_pre, d_z_pre, d_o_pre], axis=1)
+    dh_rec_next = jnp.einsum("bghv,hkgv->bhk", dpre, r32)
+    return (dc_t * a, dn_t * a, dh_rec_next), dpre
+
+  carry0 = (d_c_fin, d_n_fin, d_h_fin)
+  _, dpres = lax.scan(
+      step, carry0, (d_hs, pres, a_s, c_prev, n_prev, c_post, n_post),
+      reverse=True)
+
+  d_xw = dpres
+  # ONE weight-gradient contraction (and hence one data-axis all-reduce)
+  # for the whole sequence — the point of this custom backward.
+  d_r = jnp.einsum("sbghv,sbhk->hkgv", dpres, h_prev).astype(r.dtype)
+  d_bias = jnp.sum(dpres, axis=(0, 1))
+  return d_xw, d_r, d_bias
+
+
+_slstm_scan.defvjp(_slstm_scan_fwd, _slstm_scan_bwd)
+
+
+def slstm_apply_seq(p: Params, x: Array, cfg, *, return_state: bool = False):
+  """Sequential sLSTM over time with the custom low-collective backward."""
+  xw = jnp.einsum("bsd,dghk->bsghk", x.astype(p["w"].dtype), p["w"],
+                  preferred_element_type=jnp.float32)
+  hs, (c, n, m, h) = _slstm_scan(
+      xw.transpose(1, 0, 2, 3, 4), p["r"], p["b"])
+  hs = hs.transpose(1, 0, 2, 3)                          # (B,S,H,dh)
+  y = jnp.einsum("bshk,hkd->bsd", hs.astype(x.dtype), p["w_out"])
+  if return_state:
+    return y, {"c": c, "n": n, "m": m, "h": h}
+  return y
+
+
+def slstm_apply_decode(p: Params, x: Array, state: Params, cfg):
+  xw = jnp.einsum("bd,dghk->bghk", x.astype(p["w"].dtype), p["w"],
+                  preferred_element_type=jnp.float32)
+  state = _slstm_cell(p, xw, state)
+  y = jnp.einsum("bhk,hkd->bd", state["h"].astype(x.dtype), p["w_out"])
+  return y, state

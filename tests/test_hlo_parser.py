@@ -1,0 +1,126 @@
+"""HLO cost-parser correctness: scan/unroll parity + synthetic fragments."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.hlo import (
+    HloCostModel, _shape_bytes_elems, analyze_text, parse_computations)
+
+
+def test_shape_bytes():
+  assert _shape_bytes_elems("f32[4,8]{1,0}") == (128, 32)
+  assert _shape_bytes_elems("bf16[10]{0}") == (20, 10)
+  assert _shape_bytes_elems("(s32[], f32[2,2]{1,0})") == (20, 5)
+  assert _shape_bytes_elems("pred[]") == (1, 1)
+
+
+def test_scan_flops_match_unrolled():
+  """The whole point of the parser: scan bodies scale by trip count."""
+  def body(c, w):
+    return jnp.tanh(c @ w), ()
+
+  def f_scan(x, ws):
+    c, _ = jax.lax.scan(body, x, ws)
+    return jnp.sum(c)
+
+  def f_unroll(x, ws):
+    c = x
+    for i in range(8):
+      c = jnp.tanh(c @ ws[i])
+    return jnp.sum(c)
+
+  x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+  ws = jax.ShapeDtypeStruct((8, 32, 32), jnp.float32)
+  rs = analyze_text(jax.jit(f_scan).lower(x, ws).compile().as_text())
+  ru = analyze_text(jax.jit(f_unroll).lower(x, ws).compile().as_text())
+  assert rs["flops_per_device"] > 0
+  np.testing.assert_allclose(rs["flops_per_device"], ru["flops_per_device"],
+                             rtol=0.15)
+  # dot flops dominate: 8 * 2 * 32^3
+  assert rs["flops_per_device"] >= 8 * 2 * 32 ** 3
+
+
+def test_dot_flops_exact():
+  def f(a, b):
+    return a @ b
+
+  a = jax.ShapeDtypeStruct((16, 64), jnp.float32)
+  b = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+  r = analyze_text(jax.jit(f).lower(a, b).compile().as_text())
+  want = 2 * 16 * 32 * 64
+  assert abs(r["flops_per_device"] - want) / want < 0.05
+
+
+def test_synthetic_while_trip_count():
+  text = """
+HloModule test, num_partitions=1
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %d = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]{1,0}) tuple(%ni, %d)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[8,8]) -> f32[8,8] {
+  %x = f32[8,8]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,8]{1,0}) tuple(%zero, %x)
+  %w = (s32[], f32[8,8]{1,0}) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+  r = analyze_text(text)
+  # 12 iterations of an 8x8x8 dot (+ a few scalar ops per iteration)
+  want = 12 * 2 * 8 * 8 * 8
+  assert want <= r["flops_per_device"] <= want + 1000, r
+
+
+def test_synthetic_collectives_counted():
+  text = """
+HloModule test, num_partitions=4
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (x: f32[128]) -> f32[128] {
+  %x = f32[128]{0} parameter(0)
+  %ar = f32[128]{0} all-reduce(%x), replica_groups={}, to_apply=%sum
+  %ag = f32[512]{0} all-gather(%ar), dimensions={0}
+  ROOT %o = f32[128]{0} slice(%ag), slice={[0:128]}
+}
+"""
+  r = analyze_text(text)
+  assert r["collectives_by_type"]["all-reduce"] == 512
+  assert r["collectives_by_type"]["all-gather"] == 512
+  assert r["collective_bytes_per_device"] == 1024
+
+
+def test_parse_computations_structure():
+  comps = parse_computations("""
+%foo (a: f32[2]) -> f32[2] {
+  %a = f32[2]{0} parameter(0)
+  ROOT %t = f32[2]{0} tanh(%a)
+}
+
+ENTRY %main (x: f32[2]) -> f32[2] {
+  %x = f32[2]{0} parameter(0)
+  ROOT %c = f32[2]{0} call(%x), to_apply=%foo
+}
+""")
+  assert set(comps) == {"foo", "main"}
+  assert comps["foo"][1].opcode == "tanh"

@@ -1,0 +1,128 @@
+"""Isotonic solver correctness: lax PAV and minimax vs exhaustive oracle."""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.isotonic import isotonic_kl, isotonic_l2
+from repro.kernels.ref import pav_kl_ref, pav_l2_ref
+
+rng = np.random.default_rng(0)
+
+
+def _partitions(n):
+  for cuts in itertools.product([0, 1], repeat=n - 1):
+    blocks, start = [], 0
+    for i, c in enumerate(cuts):
+      if c:
+        blocks.append((start, i + 1))
+        start = i + 1
+    blocks.append((start, n))
+    yield blocks
+
+
+def exhaustive_l2(y):
+  n = len(y)
+  best, bestobj = None, np.inf
+  for blocks in _partitions(n):
+    vals = [np.mean(y[a:b]) for a, b in blocks]
+    if all(vals[i] >= vals[i + 1] - 1e-12 for i in range(len(vals) - 1)):
+      v = np.concatenate([[val] * (b - a)
+                          for (a, b), val in zip(blocks, vals)])
+      obj = np.sum((v - y) ** 2)
+      if obj < bestobj - 1e-12:
+        bestobj, best = obj, v
+  return best
+
+
+def exhaustive_kl(s, w):
+  def lse(x):
+    return np.log(np.sum(np.exp(x)))
+  n = len(s)
+  best, bestobj = None, np.inf
+  for blocks in _partitions(n):
+    vals = [lse(s[a:b]) - lse(w[a:b]) for a, b in blocks]
+    if all(vals[i] >= vals[i + 1] - 1e-12 for i in range(len(vals) - 1)):
+      v = np.concatenate([[val] * (b - a)
+                          for (a, b), val in zip(blocks, vals)])
+      obj = np.sum(np.exp(s - v)) + np.sum(np.exp(w) * v)
+      if obj < bestobj - 1e-12:
+        bestobj, best = obj, v
+  return best
+
+
+@pytest.mark.parametrize("trial", range(25))
+def test_l2_matches_exhaustive(trial):
+  n = int(rng.integers(1, 9))
+  y = rng.normal(size=n).astype(np.float32)
+  want = exhaustive_l2(y.astype(np.float64))
+  np.testing.assert_allclose(isotonic_l2(jnp.array(y)), want, atol=1e-5)
+  np.testing.assert_allclose(pav_l2_ref(jnp.array(y)), want, atol=1e-4)
+  np.testing.assert_allclose(
+      isotonic_l2(jnp.array(y), "minimax"), want, atol=1e-4)
+
+
+@pytest.mark.parametrize("trial", range(25))
+def test_kl_matches_exhaustive(trial):
+  n = int(rng.integers(1, 8))
+  s = np.sort(rng.normal(size=n))[::-1].copy().astype(np.float32)
+  w = np.sort(rng.normal(size=n))[::-1].copy().astype(np.float32)
+  want = exhaustive_kl(s.astype(np.float64), w.astype(np.float64))
+  np.testing.assert_allclose(
+      isotonic_kl(jnp.array(s), jnp.array(w)), want, atol=1e-4)
+  np.testing.assert_allclose(
+      pav_kl_ref(jnp.array(s), jnp.array(w)), want, atol=1e-4)
+
+
+def test_solution_is_monotone_and_preserves_block_means():
+  y = jnp.array(rng.normal(size=(7, 33)).astype(np.float32))
+  v = isotonic_l2(y)
+  assert bool(jnp.all(v[:, :-1] >= v[:, 1:] - 1e-5))
+  # KKT: total sum preserved (sum of y == sum of v for L2 isotonic)
+  np.testing.assert_allclose(jnp.sum(v, -1), jnp.sum(y, -1),
+                             rtol=1e-4, atol=1e-4)
+
+
+def test_vjp_matches_finite_difference():
+  y = jnp.array(rng.normal(size=9).astype(np.float32))
+  u = jnp.array(rng.normal(size=9).astype(np.float32))
+
+  def f(x):
+    return jnp.sum(isotonic_l2(x) * u)
+
+  g = jax.grad(f)(y)
+  eps = 1e-3
+  fd = np.array([(f(y.at[i].add(eps)) - f(y.at[i].add(-eps))) / (2 * eps)
+                 for i in range(9)])
+  np.testing.assert_allclose(g, fd, atol=2e-2)
+
+
+def test_vjp_kl_matches_finite_difference():
+  s = jnp.array(np.sort(rng.normal(size=7))[::-1].copy().astype(np.float32))
+  w = jnp.array(np.sort(rng.normal(size=7))[::-1].copy().astype(np.float32))
+  u = jnp.array(rng.normal(size=7).astype(np.float32))
+
+  def f(a, b):
+    return jnp.sum(isotonic_kl(a, b) * u)
+
+  gs, gw = jax.grad(f, argnums=(0, 1))(s, w)
+  eps = 1e-3
+  for i in range(7):
+    fs = (f(s.at[i].add(eps), w) - f(s.at[i].add(-eps), w)) / (2 * eps)
+    fw = (f(s, w.at[i].add(eps)) - f(s, w.at[i].add(-eps))) / (2 * eps)
+    assert abs(float(gs[i]) - float(fs)) < 2e-2
+    assert abs(float(gw[i]) - float(fw)) < 2e-2
+
+
+def test_bf16_roundtrip_dtype():
+  y = jnp.array(rng.normal(size=(2, 5)), jnp.bfloat16)
+  assert isotonic_l2(y).dtype == jnp.bfloat16
+
+
+def test_impls_agree_large_n():
+  y = jnp.array(rng.normal(size=(4, 257)).astype(np.float32))
+  np.testing.assert_allclose(
+      isotonic_l2(y), isotonic_l2(y, "minimax"), atol=1e-4)

@@ -1,0 +1,76 @@
+"""Loss-level behavior: Spearman learning, LTS interpolation, top-k loss."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    hard_rank, soft_lts_loss, soft_spearman_loss, soft_topk_loss,
+    soft_trimmed_token_loss, spearman_correlation, topk_accuracy)
+
+rng = np.random.default_rng(2)
+
+
+def test_lts_interpolates_between_trim_and_mean():
+  """Paper Fig. 6: eps->0 gives hard least-trimmed mean; eps->inf gives
+  the plain mean."""
+  losses = jnp.array([10.0, 1.0, 2.0, 3.0])  # one outlier
+  hard = soft_lts_loss(losses, trim_count=1, regularization_strength=1e-5)
+  np.testing.assert_allclose(hard, np.mean([1.0, 2.0, 3.0]), atol=1e-3)
+  soft = soft_lts_loss(losses, trim_count=1, regularization_strength=1e7)
+  np.testing.assert_allclose(soft, np.mean([10, 1, 2, 3]), atol=1e-2)
+
+
+def test_lts_gradient_downweights_outlier():
+  losses_fn = lambda w: (jnp.array([10.0, 1.0, 2.0, 3.0]) * w)
+  g = jax.grad(lambda w: soft_lts_loss(losses_fn(w), 1, 1e-4))(1.0)
+  # gradient sees only the 3 kept losses: d/dw mean(1w,2w,3w) = 2
+  np.testing.assert_allclose(g, 2.0, atol=1e-2)
+
+
+def test_trimmed_token_loss_shapes():
+  tl = jnp.array(rng.random((4, 64)).astype(np.float32))
+  out = soft_trimmed_token_loss(tl, 0.1, 0.01)
+  assert out.shape == ()
+  assert float(out) < float(jnp.mean(tl)) + 1e-6
+
+
+def test_spearman_loss_learns_ranking():
+  """Label-ranking sanity (paper §6.3): a linear model trained with the
+  soft-Spearman loss recovers the target permutation ordering."""
+  d, n = 8, 5
+  w_true = rng.normal(size=(d, n)).astype(np.float32)
+  xs = rng.normal(size=(64, d)).astype(np.float32)
+  scores = xs @ w_true
+  target = np.asarray(hard_rank(jnp.array(scores), "ASCENDING"))
+
+  w = jnp.zeros((d, n))
+  xs_j, tgt = jnp.array(xs), jnp.array(target)
+
+  def loss(w):
+    return soft_spearman_loss(xs_j @ w, tgt, 1.0)
+
+  lr = 0.05
+  g_fn = jax.jit(jax.grad(loss))
+  for _ in range(150):
+    w = w - lr * g_fn(w)
+
+  pred = np.asarray(hard_rank(xs_j @ w, "ASCENDING"))
+  rho = np.asarray(spearman_correlation(jnp.array(pred, jnp.float32),
+                                        jnp.array(target, jnp.float32)))
+  assert rho.mean() > 0.9, rho.mean()
+
+
+def test_topk_loss_zero_when_confident():
+  theta = jnp.array([[10.0, -5.0, -5.0], [-5.0, 10.0, -5.0]])
+  labels = jnp.array([0, 1])
+  l = soft_topk_loss(theta, labels, k=1, regularization_strength=1e-2)
+  assert float(l) < 1e-2
+  assert float(topk_accuracy(theta, labels, 1)) == 1.0
+
+
+def test_topk_loss_positive_when_wrong():
+  theta = jnp.array([[10.0, -5.0, -5.0]])
+  labels = jnp.array([2])
+  l = soft_topk_loss(theta, labels, k=1, regularization_strength=1e-2)
+  assert float(l) > 0.5

@@ -1,0 +1,110 @@
+"""Property-based tests (hypothesis) for the paper's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import soft_rank, soft_sort, soft_topk_mask
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+floats = st.floats(min_value=-50, max_value=50, allow_nan=False,
+                   allow_infinity=False)
+vectors = st.lists(floats, min_size=1, max_size=24)
+eps_strat = st.floats(min_value=1e-3, max_value=1e3, allow_nan=False)
+
+
+def _arr(v):
+  return jnp.array(np.asarray(v, np.float32))
+
+
+@given(vectors, eps_strat)
+@settings(**SETTINGS)
+def test_sort_output_monotone(v, eps):
+  s = soft_sort(_arr(v), eps)
+  assert bool(jnp.all(s[:-1] >= s[1:] - 1e-4 * (1 + jnp.abs(s[:-1]))))
+
+
+@given(vectors, eps_strat)
+@settings(**SETTINGS)
+def test_sort_sum_conserved(v, eps):
+  x = _arr(v)
+  np.testing.assert_allclose(
+      float(jnp.sum(soft_sort(x, eps))), float(jnp.sum(x)),
+      rtol=1e-3, atol=1e-3)
+
+
+@given(vectors, eps_strat)
+@settings(**SETTINGS)
+def test_rank_in_permutahedron(v, eps):
+  """Majorization check: soft ranks lie in P((n,...,1)).
+
+  y in P(w) iff sum(y) == sum(w) and for all k, the sum of the k largest
+  entries of y is <= sum of k largest of w.
+  """
+  x = _arr(v)
+  n = x.shape[0]
+  r = np.sort(np.asarray(soft_rank(x, eps)))[::-1]
+  w = np.arange(n, 0, -1, dtype=np.float64)
+  np.testing.assert_allclose(r.sum(), w.sum(), rtol=1e-3, atol=1e-3)
+  tol = 1e-3 * n * n
+  assert np.all(np.cumsum(r) <= np.cumsum(w) + tol)
+
+
+@given(vectors, eps_strat)
+@settings(**SETTINGS)
+def test_rank_translation_invariance(v, eps):
+  x = _arr(v)
+  r1 = soft_rank(x, eps)
+  r2 = soft_rank(x + 7.5, eps)
+  np.testing.assert_allclose(np.asarray(r1), np.asarray(r2),
+                             rtol=1e-3, atol=1e-3)
+
+
+@given(vectors, eps_strat)
+@settings(**SETTINGS)
+def test_rank_permutation_equivariance(v, eps):
+  x = np.asarray(v, np.float32)
+  perm = np.random.default_rng(0).permutation(len(x))
+  r = np.asarray(soft_rank(_arr(x), eps))
+  rp = np.asarray(soft_rank(_arr(x[perm]), eps))
+  # ties can resolve differently across permutations; only check when the
+  # input has no near-ties
+  sx = np.sort(x)
+  if len(x) > 1 and np.min(np.diff(sx)) < 1e-3:
+    return
+  np.testing.assert_allclose(rp, r[perm], rtol=1e-3, atol=2e-3)
+
+
+@given(vectors, eps_strat)
+@settings(**SETTINGS)
+def test_scaling_relation(v, eps):
+  """r_{eps,Q}(c * theta) == r_{eps/c,Q}(theta) for c > 0."""
+  x = _arr(v)
+  c = 3.0
+  r1 = soft_rank(c * x, eps)
+  r2 = soft_rank(x, eps / c)
+  np.testing.assert_allclose(np.asarray(r1), np.asarray(r2),
+                             rtol=1e-3, atol=2e-3)
+
+
+@given(vectors, st.integers(min_value=1, max_value=5), eps_strat)
+@settings(**SETTINGS)
+def test_topk_mask_bounds_and_sum(v, k, eps):
+  x = _arr(v)
+  n = x.shape[0]
+  k = min(k, n)
+  m = np.asarray(soft_topk_mask(x, k, eps))
+  assert np.all(m >= -1e-4) and np.all(m <= 1 + 1e-4)
+  np.testing.assert_allclose(m.sum(), k, rtol=1e-3, atol=1e-3)
+
+
+@given(vectors)
+@settings(**SETTINGS)
+def test_gradients_finite(v):
+  x = _arr(v)
+  g = jax.grad(lambda t: jnp.sum(jnp.sin(soft_rank(t, 0.3))))(x)
+  assert bool(jnp.all(jnp.isfinite(g)))
+  g2 = jax.grad(lambda t: jnp.sum(jnp.sin(soft_sort(t, 0.3, "kl"))))(x)
+  assert bool(jnp.all(jnp.isfinite(g2)))

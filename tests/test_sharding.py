@@ -1,0 +1,134 @@
+"""Sharding rules + a true multi-device dry-run smoke in a subprocess.
+
+The subprocess is required because the 8-device host platform must be
+configured before jax initializes (the main test process keeps 1 device).
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.configs.smoke import smoke_config
+
+
+class FakeMesh:
+  def __init__(self, shape):
+    self.shape = dict(shape)
+    self.axis_names = tuple(shape)
+    self.size = 1
+    for v in shape.values():
+      self.size *= v
+
+
+def make_rules(fsdp=False):
+  from repro.sharding.specs import ShardingRules
+  mesh = FakeMesh({"data": 16, "model": 16})
+  return ShardingRules(mesh, data_axes=("data",), model_axis="model",
+                       fsdp=fsdp)
+
+
+def test_param_rules_divisibility_fallback():
+  from repro.sharding.specs import param_spec
+  rules = make_rules()
+  # 10 heads cannot shard over 16-way model axis -> falls back to None
+  spec = param_spec(rules, "seg0/l0_local/attn/wq", (3, 2560, 10, 256))
+  assert spec[2] is None
+  # 32 heads can
+  spec = param_spec(rules, "seg0/l0_dense/attn/wq", (3, 2560, 32, 80))
+  assert spec[2] == "model"
+
+
+def test_param_rules_moe_vs_dense_ffn():
+  from repro.sharding.specs import param_spec
+  rules = make_rules(fsdp=True)
+  # routed experts (E, d, f): E=64 over model
+  spec = param_spec(rules, "seg0/l0_moe/ffn/we_in", (1, 64, 2048, 1408))
+  assert spec[1] == "model"
+  # dense ffn (d, f): d over data (fsdp) and f over model
+  spec = param_spec(rules, "seg0/l0_dense/ffn/w_in", (1, 2048, 8192))
+  assert spec[2] == "model"
+  # grok: 8 experts cannot take the 16-way axis -> falls to ffn dim
+  spec = param_spec(rules, "seg0/l0_moe/ffn/we_in", (1, 8, 6144, 32768))
+  assert spec[1] is None and spec[3] == "model"
+
+
+def test_no_axis_used_twice():
+  from repro.sharding.specs import ShardingRules
+  rules = make_rules()
+  spec = rules.spec((16, 32, 64), (("data",), ("data", "model"), None))
+  # 'data' consumed by dim0 must not repeat in dim1
+  flat = []
+  for s in spec:
+    if s is None:
+      continue
+    flat.extend((s,) if isinstance(s, str) else s)
+  assert len(flat) == len(set(flat))
+
+
+def test_cache_rules_long_context_batch1():
+  from repro.sharding.specs import cache_spec
+  rules = make_rules()
+  # (reps, B=1, S, H, D): B unshardable -> S takes data+model (256-way)
+  spec = cache_spec(rules, "seg0/l0_dense/k", (4, 1, 524288, 8, 64))
+  assert spec[1] is None
+  assert spec[2] is not None
+
+
+def test_activation_rules_noop_without_context():
+  import jax.numpy as jnp
+  from repro.sharding.specs import shard_activation
+  x = jnp.ones((2, 3, 4))
+  y = shard_activation(x, "residual")
+  assert y is x
+
+
+@pytest.mark.slow
+def test_subprocess_multidevice_dryrun():
+  """Lower + compile a tiny arch on an 8-device (2x4) mesh end to end."""
+  code = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, json, dataclasses
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs.smoke import smoke_config
+    from repro.launch.mesh import make_debug_mesh, data_axes_of
+    from repro.launch import steps as ST
+    from repro.models import transformer as T
+    from repro.sharding import specs as SP
+    from repro.optim import adamw
+
+    cfg = smoke_config("llama3.2-1b")
+    cfg = dataclasses.replace(cfg, d_model=64, num_heads=4, num_kv_heads=4)
+    mesh = make_debug_mesh((2, 4), ("data", "model"))
+    rules = SP.ShardingRules(mesh, data_axes=("data",), model_axis="model")
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    pspecs = SP.param_specs_tree(rules, params)
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    opt_cfg = adamw.AdamWConfig()
+    opt = ST.init_opt_state(cfg, opt_cfg, params)
+    ospecs = SP.opt_state_specs_tree(rules, opt, pspecs)
+    oshard = jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    batch = {"tokens": jnp.zeros((8, 32), jnp.int32),
+             "targets": jnp.zeros((8, 32), jnp.int32)}
+    step = ST.make_train_step(cfg, opt_cfg)
+    with mesh, SP.use_rules(rules):
+      jitted = jax.jit(step, in_shardings=(pshard, oshard, None),
+                       out_shardings=(pshard, oshard, None))
+      params2, opt2, metrics = jitted(params, opt, batch)
+    assert jnp.isfinite(metrics["loss"]), metrics
+    print(json.dumps({"ok": True, "loss": float(metrics["loss"])}))
+  """)
+  env = dict(os.environ)
+  env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+  out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=600)
+  assert out.returncode == 0, out.stderr[-2000:]
+  rec = json.loads(out.stdout.strip().splitlines()[-1])
+  assert rec["ok"]
