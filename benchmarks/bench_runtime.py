@@ -1,11 +1,18 @@
-"""Paper Figure 4 (right): runtime vs input dimension n.
+"""Paper Figure 4 (right): runtime vs input dimension n; backend sweep.
 
-Compares our O(n log n) soft rank (Q and E) against the paper's baselines:
-OT/Sinkhorn (O(T n^2)) and All-pairs (O(n^2)), forward-only and with
-backpropagation, on a batch of vectors (batch scaled for single-core CPU;
-the paper used batch 128 on GPU).  The claim being reproduced: our
-operators' runtime is nearly flat in n while baselines grow quadratically
-and exhaust memory first.
+Part 1 (``run``) compares our O(n log n) soft rank (Q and E) against the
+paper's baselines: OT/Sinkhorn (O(T n^2)) and All-pairs (O(n^2)),
+forward-only and with backpropagation, on a batch of vectors (batch scaled
+for single-core CPU; the paper used batch 128 on GPU).  The claim being
+reproduced: our operators' runtime is nearly flat in n while baselines grow
+quadratically and exhaust memory first.
+
+Part 2 (``run_backend_sweep``) sweeps the dispatch-layer backends
+("lax" | "pallas" | "minimax") over n x batch and writes the
+``BENCH_runtime.json`` artifact that CI archives.  Combinations that are
+infeasible for a backend on the current platform (minimax's O(batch * n^2)
+memory, the Pallas interpreter off-TPU) are recorded as skipped rather than
+silently dropped.
 """
 
 from __future__ import annotations
@@ -16,9 +23,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, time_fn, write_json
 from repro.core import soft_rank
 from repro.core.baselines import allpairs_rank, ot_rank
+from repro.kernels import dispatch as dispatch_mod
 
 BATCH = 8
 NS = (100, 500, 1000, 2000)      # paper used up to 5000 on GPU; CPU-scaled
@@ -61,5 +69,81 @@ def run():
       emit(f"fig4_runtime_bwd/{name}/n={n}", us, f"batch={BATCH},fwd+bwd")
 
 
+# ---------------------------------------------------------------------------
+# Backend sweep -> BENCH_runtime.json
+# ---------------------------------------------------------------------------
+
+SWEEP_NS = (100, 1000, 10000)
+SWEEP_BATCHES = (1, 32, 256)
+SMOKE_NS = (64, 200)
+SMOKE_BATCHES = (1, 8)
+
+# Feasibility caps keep the sweep bounded off-TPU; every skip is recorded.
+_MINIMAX_MAX_ELEMS = 64e6       # batch * n^2 f32 intermediates (~256 MB)
+_INTERPRET_MAX_CELLS = 4096     # Pallas interpreter runs Python per step
+_INTERPRET_MAX_N = 1000
+
+
+def _feasibility(backend: str, n: int, batch: int, platform: str) -> str:
+  """Empty string if runnable, else the reason to skip."""
+  if backend == "minimax" and batch * n * n > _MINIMAX_MAX_ELEMS:
+    return f"minimax needs batch*n^2 = {batch * n * n:.0f} f32 elems"
+  if backend == "pallas" and platform != "tpu":
+    if n > _INTERPRET_MAX_N or n * batch > _INTERPRET_MAX_CELLS:
+      return "pallas interpret mode too slow off-TPU at this size"
+  return ""
+
+
+def run_backend_sweep(smoke: bool = False,
+                      out_path: str = "BENCH_runtime.json") -> dict:
+  """Time soft_rank fwd and fwd+bwd per backend over n x batch; write JSON."""
+  platform = jax.default_backend()
+  ns = SMOKE_NS if smoke else SWEEP_NS
+  batches = SMOKE_BATCHES if smoke else SWEEP_BATCHES
+  backends = dispatch_mod.registered_backends("isotonic", "l2")
+  rng = np.random.default_rng(0)
+  iters = 2 if smoke else 3
+
+  results = []
+  for n in ns:
+    for batch in batches:
+      theta = jnp.array(rng.normal(size=(batch, n)).astype(np.float32))
+      for backend in sorted(set(backends)):
+        for reg in ("l2", "kl"):
+          rec = {"op": "soft_rank", "regularization": reg,
+                 "backend": backend, "n": n, "batch": batch}
+          skip = _feasibility(backend, n, batch, platform)
+          if skip:
+            rec["skipped"] = skip
+            results.append(rec)
+            emit(f"backend_sweep/{reg}/{backend}/n={n}/b={batch}",
+                 float("nan"), f"skipped: {skip}")
+            continue
+          fwd = jax.jit(functools.partial(
+              soft_rank, regularization_strength=0.1, regularization=reg,
+              impl=backend))
+          rec["fwd_us"] = time_fn(fwd, theta, warmup=1, iters=iters)
+          bwd = jax.jit(jax.grad(lambda t, f=fwd: jnp.sum(f(t) ** 2)))
+          rec["fwd_bwd_us"] = time_fn(bwd, theta, warmup=1, iters=iters)
+          results.append(rec)
+          emit(f"backend_sweep/{reg}/{backend}/n={n}/b={batch}",
+               rec["fwd_us"], f"fwd; bwd={rec['fwd_bwd_us']:.1f}us")
+
+  payload = {
+      "meta": {
+          "platform": platform,
+          "jax": jax.__version__,
+          "smoke": smoke,
+          "auto_resolves_to": dispatch_mod.resolve_backend(
+              "isotonic", "l2", None, shape=(max(batches), max(ns)),
+              platform=platform),
+      },
+      "results": results,
+  }
+  write_json(out_path, payload)
+  return payload
+
+
 if __name__ == "__main__":
   run()
+  run_backend_sweep()

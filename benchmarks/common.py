@@ -1,7 +1,8 @@
-"""Benchmark utilities: timing + CSV emission."""
+"""Benchmark utilities: timing + CSV/JSON emission."""
 
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -22,3 +23,10 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
   print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def write_json(path: str, payload: dict) -> None:
+  """Write a benchmark artifact (CI uploads BENCH_*.json files)."""
+  with open(path, "w") as f:
+    json.dump(payload, f, indent=2, sort_keys=True)
+  print(f"wrote {path}")

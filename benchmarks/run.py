@@ -1,8 +1,13 @@
 """Run every benchmark. One module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig4_runtime,...]
+  PYTHONPATH=src python -m benchmarks.run [--only fig4_runtime,...] [--smoke]
 
-Output: ``name,us_per_call,derived`` CSV on stdout.
+Output: ``name,us_per_call,derived`` CSV on stdout, plus ``BENCH_*.json``
+artifacts (currently ``BENCH_runtime.json`` from the dispatch-backend
+sweep) in the working directory — CI uploads these.
+
+``--smoke`` runs only the backend sweep at reduced sizes: a fast signal
+that every registered backend still executes and emits the artifact.
 """
 
 from __future__ import annotations
@@ -25,6 +30,7 @@ BENCHES = {
     "table1_label_ranking": bench_label_ranking.run,  # Table 1 / Figure 5
     "fig6_fig7_lts": bench_lts.run,           # Figures 6-7
     "router": bench_router.run,               # framework hot path
+    "backend_sweep": bench_runtime.run_backend_sweep,  # BENCH_runtime.json
 }
 
 
@@ -32,10 +38,16 @@ def main() -> None:
   ap = argparse.ArgumentParser()
   ap.add_argument("--only", default=None,
                   help="comma-separated subset of " + ",".join(BENCHES))
+  ap.add_argument("--smoke", action="store_true",
+                  help="tiny backend sweep only; still writes BENCH_*.json")
   args = ap.parse_args()
-  names = args.only.split(",") if args.only else list(BENCHES)
 
   print("name,us_per_call,derived")
+  if args.smoke:
+    bench_runtime.run_backend_sweep(smoke=True)
+    return
+
+  names = args.only.split(",") if args.only else list(BENCHES)
   failed = []
   for name in names:
     try:

@@ -10,12 +10,15 @@ exactly, in O(n) after inputs are sorted, with the analytic block solutions
   gamma_Q(B) = mean_{i in B} (s_i - w_i)          (Eq. 7)
   gamma_E(B) = LSE(s_B) - LSE(w_B)                (Eq. 8)
 
-The forward pass is a sequential stack machine implemented with
-``lax.fori_loop``/``lax.while_loop`` so it is jittable, vmappable and runs
-on any backend.  A Pallas TPU kernel (``repro.kernels.pav``) provides the
-tiled batched fast path; both share this module's exact O(n) backward pass
-(Lemma 2): the Jacobian is block-diagonal with rank-1 blocks, recovered from
-runs of equal values in the forward output, so the VJP is two segment
+This module is batched-first: the public operators accept arbitrary leading
+batch dimensions and make exactly one dispatch call per forward pass
+(``repro.kernels.dispatch``), which routes the flattened (rows, n) batch to
+a registered backend — ``"lax"`` (reference ``lax.fori_loop`` stack machine,
+natively batched), ``"pallas"`` (tiled TPU kernel), or ``"minimax"`` (O(n^2)
+closed form for small n / SPMD) — with ``"auto"`` resolving by platform and
+shape.  All backends share this module's exact O(n) backward pass (Lemma 2):
+the Jacobian is block-diagonal with rank-1 blocks, recovered from runs of
+equal values in the forward output, so the VJP is two batched segment
 reductions and never differentiates through solver iterates.
 """
 
@@ -26,136 +29,59 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 Array = jax.Array
 
 _INT = jnp.int32
 
 
-def _expand_blocks(starts: Array, top: Array, block_vals: Array, n: int) -> Array:
-  """Expand per-block values to per-position values.
-
-  ``starts[:top+1]`` are increasing block start indices; positions are mapped
-  to their block with a searchsorted on the (sentinel-padded) starts.
-  """
-  idx = jnp.arange(n, dtype=_INT)
-  starts_pad = jnp.where(idx <= top, starts, n)
-  bid = jnp.searchsorted(starts_pad, idx, side="right") - 1
-  return block_vals[bid]
-
-
 # ---------------------------------------------------------------------------
-# Quadratic regularization (classic isotonic regression).
-# ---------------------------------------------------------------------------
-
-
-def _pav_l2_1d(y: Array) -> Array:
-  """PAV for min ||v - y||^2 s.t. v non-increasing. y: (n,) float."""
-  n = y.shape[0]
-  sums = jnp.zeros(n, y.dtype)
-  cnts = jnp.zeros(n, y.dtype)
-  starts = jnp.zeros(n, _INT)
-
-  def push(i, state):
-    sums, cnts, starts, top = state
-    cur = (y[i], jnp.ones((), y.dtype), jnp.asarray(i, _INT), top)
-
-    def violated(c):
-      cs, cc, _, t = c
-      # value[top] <= current value  (cross-multiplied; counts > 0)
-      return (t >= 0) & (sums[t] * cc <= cs * cnts[t])
-
-    def merge(c):
-      cs, cc, _, t = c
-      return (cs + sums[t], cc + cnts[t], starts[t], t - 1)
-
-    cs, cc, cstart, top = lax.while_loop(violated, merge, cur)
-    top = top + 1
-    return (
-        sums.at[top].set(cs),
-        cnts.at[top].set(cc),
-        starts.at[top].set(cstart),
-        top,
-    )
-
-  sums, cnts, starts, top = lax.fori_loop(
-      0, n, push, (sums, cnts, starts, jnp.asarray(-1, _INT)))
-  block_vals = sums / jnp.maximum(cnts, 1)
-  return _expand_blocks(starts, top, block_vals, n)
-
-
-# ---------------------------------------------------------------------------
-# Entropic (KL) regularization.
-# ---------------------------------------------------------------------------
-
-
-def _pav_kl_1d(s: Array, w: Array) -> Array:
-  """PAV for the E objective; returns v with v_i = LSE(s_B) - LSE(w_B)."""
-  n = s.shape[0]
-  lse_s = jnp.zeros(n, s.dtype)
-  lse_w = jnp.zeros(n, s.dtype)
-  starts = jnp.zeros(n, _INT)
-
-  def push(i, state):
-    lse_s_a, lse_w_a, starts, top = state
-    cur = (s[i], w[i], jnp.asarray(i, _INT), top)
-
-    def violated(c):
-      cs, cw, _, t = c
-      return (t >= 0) & (lse_s_a[t] - lse_w_a[t] <= cs - cw)
-
-    def merge(c):
-      cs, cw, _, t = c
-      return (jnp.logaddexp(cs, lse_s_a[t]), jnp.logaddexp(cw, lse_w_a[t]),
-              starts[t], t - 1)
-
-    cs, cw, cstart, top = lax.while_loop(violated, merge, cur)
-    top = top + 1
-    return (
-        lse_s_a.at[top].set(cs),
-        lse_w_a.at[top].set(cw),
-        starts.at[top].set(cstart),
-        top,
-    )
-
-  lse_s, lse_w, starts, top = lax.fori_loop(
-      0, n, push, (lse_s, lse_w, starts, jnp.asarray(-1, _INT)))
-  return _expand_blocks(starts, top, lse_s - lse_w, n)
-
-
-# ---------------------------------------------------------------------------
-# Block recovery + segment reductions shared by all backward passes.
+# Block recovery + batched segment reductions shared by all backward passes.
 # ---------------------------------------------------------------------------
 
 
 def _block_ids(v: Array) -> Array:
-  """Segment ids from runs of equal values in the (non-increasing) solution."""
-  n = v.shape[0]
-  first = jnp.ones((1,), bool)
-  starts = jnp.concatenate([first, v[1:] != v[:-1]])
-  return jnp.cumsum(starts.astype(_INT)) - 1
+  """Per-row segment ids from runs of equal values, v: (B, n) -> (B, n)."""
+  starts = jnp.concatenate(
+      [jnp.ones_like(v[:, :1], bool), v[:, 1:] != v[:, :-1]], axis=-1)
+  return jnp.cumsum(starts.astype(_INT), axis=-1) - 1
 
 
-def _segment_mean_bcast(g: Array, bid: Array) -> Array:
-  n = g.shape[0]
-  gsum = jax.ops.segment_sum(g, bid, num_segments=n)
-  cnt = jax.ops.segment_sum(jnp.ones_like(g), bid, num_segments=n)
-  return (gsum / jnp.maximum(cnt, 1))[bid]
-
-
-def _segment_softmax(x: Array, bid: Array) -> Array:
-  """softmax within each segment (exact, stable)."""
-  n = x.shape[0]
-  smax = jax.ops.segment_max(x, bid, num_segments=n)
-  ex = jnp.exp(x - smax[bid])
-  denom = jax.ops.segment_sum(ex, bid, num_segments=n)
-  return ex / denom[bid]
+def _flat_ids(bid: Array) -> Array:
+  """Offset per-row block ids into one global id space (rows never mix)."""
+  b, n = bid.shape
+  return (bid + jnp.arange(b, dtype=_INT)[:, None] * n).reshape(-1)
 
 
 def _segment_sum_bcast(g: Array, bid: Array) -> Array:
-  n = g.shape[0]
-  return jax.ops.segment_sum(g, bid, num_segments=n)[bid]
+  """Within-block sum broadcast back to positions; g, bid: (B, n)."""
+  b, n = g.shape
+  gid = _flat_ids(bid)
+  s = jax.ops.segment_sum(g.reshape(-1), gid, num_segments=b * n,
+                          indices_are_sorted=True)
+  return s[gid].reshape(b, n)
+
+
+def _segment_mean_bcast(g: Array, bid: Array) -> Array:
+  b, n = g.shape
+  gid = _flat_ids(bid)
+  gsum = jax.ops.segment_sum(g.reshape(-1), gid, num_segments=b * n,
+                             indices_are_sorted=True)
+  cnt = jax.ops.segment_sum(jnp.ones((b * n,), g.dtype), gid,
+                            num_segments=b * n, indices_are_sorted=True)
+  return (gsum / jnp.maximum(cnt, 1))[gid].reshape(b, n)
+
+
+def _segment_softmax(x: Array, bid: Array) -> Array:
+  """softmax within each block (exact, stable); x, bid: (B, n)."""
+  b, n = x.shape
+  gid = _flat_ids(bid)
+  smax = jax.ops.segment_max(x.reshape(-1), gid, num_segments=b * n,
+                             indices_are_sorted=True)
+  ex = jnp.exp(x.reshape(-1) - smax[gid])
+  denom = jax.ops.segment_sum(ex, gid, num_segments=b * n,
+                              indices_are_sorted=True)
+  return (ex / denom[gid]).reshape(b, n)
 
 
 # ---------------------------------------------------------------------------
@@ -163,20 +89,16 @@ def _segment_sum_bcast(g: Array, bid: Array) -> Array:
 # ---------------------------------------------------------------------------
 
 
-def _batched(fn, *args):
-  """Apply a 1-D function over the last axis of arbitrarily-batched inputs."""
-  shape = args[0].shape
-  n = shape[-1]
-  flat = [a.reshape(-1, n) for a in args]
-  out = jax.vmap(fn)(*flat)
-  return out.reshape(shape)
+def _dispatch(regularization: str, impl: str | None, *args: Array) -> Array:
+  from repro.kernels import dispatch as _d  # lazy: keep core import light
+  return _d.dispatch("isotonic", regularization, impl, *args)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
 def isotonic_l2(y: Array, impl: str | None = None) -> Array:
   """Isotonic regression: argmin ||v - y||^2, v non-increasing (last axis).
 
-  ``impl`` must be passed EXPLICITLY by callers that need a specific solver
+  ``impl`` must be passed EXPLICITLY by callers that need a specific backend
   under jit/grad: custom_vjp fwd rules are traced lazily (after any
   trace-time context manager has exited), so ``use_impl`` only affects
   eager/top-level calls.
@@ -185,22 +107,9 @@ def isotonic_l2(y: Array, impl: str | None = None) -> Array:
 
 
 def _isotonic_l2_impl(y: Array, impl: str | None = None) -> Array:
-  impl = impl or _DEFAULT_IMPL["value"]
   dtype = y.dtype
   y32 = y.astype(jnp.float32) if dtype in (jnp.bfloat16, jnp.float16) else y
-  if impl == "pallas":
-    from repro.kernels import ops as _kops  # lazy: avoid circular import
-    v = _kops.pav_l2(y32.reshape(-1, y32.shape[-1])).reshape(y32.shape)
-  elif impl == "minimax":
-    # O(n^2) closed form with zero data-dependent control flow: the right
-    # trade on TPU for small n (MoE routers) and under SPMD, where a
-    # vmapped while_loop would all-reduce its continuation predicate every
-    # iteration (DESIGN.md §3).
-    from repro.kernels.ref import pav_l2_ref
-    v = pav_l2_ref(y32)
-  else:
-    v = _batched(_pav_l2_1d, y32)
-  return v.astype(dtype)
+  return _dispatch("l2", impl, y32).astype(dtype)
 
 
 def _isotonic_l2_fwd(y, impl):
@@ -210,13 +119,10 @@ def _isotonic_l2_fwd(y, impl):
 
 def _isotonic_l2_bwd(impl, v, g):
   # Lemma 2 (Q): dv/dy is block-diagonal with blocks 11^T/|B| (symmetric).
-  def bwd1(v1, g1):
-    bid = _block_ids(v1)
-    return _segment_mean_bcast(g1, bid)
-
   n = v.shape[-1]
-  out = jax.vmap(bwd1)(v.reshape(-1, n), g.reshape(-1, n)).reshape(v.shape)
-  return (out,)
+  v2, g2 = v.reshape(-1, n), g.reshape(-1, n)
+  out = _segment_mean_bcast(g2, _block_ids(v2))
+  return (out.reshape(v.shape),)
 
 
 isotonic_l2.defvjp(_isotonic_l2_fwd, _isotonic_l2_bwd)
@@ -229,22 +135,12 @@ def isotonic_kl(s: Array, w: Array, impl: str | None = None) -> Array:
 
 
 def _isotonic_kl_impl(s: Array, w: Array, impl: str | None = None) -> Array:
-  impl = impl or _DEFAULT_IMPL["value"]
   dtype = s.dtype
   if dtype in (jnp.bfloat16, jnp.float16):
     s = s.astype(jnp.float32)
     w = w.astype(jnp.float32)
   w = jnp.broadcast_to(w, s.shape)
-  if impl == "pallas":
-    from repro.kernels import ops as _kops
-    n = s.shape[-1]
-    v = _kops.pav_kl(s.reshape(-1, n), w.reshape(-1, n)).reshape(s.shape)
-  elif impl == "minimax":
-    from repro.kernels.ref import pav_kl_ref
-    v = pav_kl_ref(s, w)
-  else:
-    v = _batched(_pav_kl_1d, s, w)
-  return v.astype(dtype)
+  return _dispatch("kl", impl, s, w).astype(dtype)
 
 
 def _isotonic_kl_fwd(s, w, impl):
@@ -258,18 +154,12 @@ def _isotonic_kl_bwd(impl, res, g):
 
   # Lemma 2 (E): B_j = 1 (x) softmax(s_B); transpose-multiply:
   #   grad_s = softmax(s_B) * sum(g_B);  grad_w = -softmax(w_B) * sum(g_B).
-  def bwd1(s1, w1, v1, g1):
-    bid = _block_ids(v1)
-    gs = _segment_sum_bcast(g1, bid)
-    grad_s = _segment_softmax(s1, bid) * gs
-    grad_w = -_segment_softmax(w1, bid) * gs
-    return grad_s, grad_w
-
   n = s.shape[-1]
   flat = lambda a: a.reshape(-1, n)
-  grad_s, grad_w = jax.vmap(bwd1)(flat(s), flat(w_b), flat(v), flat(g))
-  grad_s = grad_s.reshape(s.shape)
-  grad_w = grad_w.reshape(s.shape)
+  bid = _block_ids(flat(v))
+  gs = _segment_sum_bcast(flat(g), bid)
+  grad_s = (_segment_softmax(flat(s), bid) * gs).reshape(s.shape)
+  grad_w = (-_segment_softmax(flat(w_b), bid) * gs).reshape(s.shape)
   # Un-broadcast w gradient if w was unbatched.
   if w.shape != s.shape:
     grad_w = jnp.sum(
@@ -280,26 +170,21 @@ def _isotonic_kl_bwd(impl, res, g):
 isotonic_kl.defvjp(_isotonic_kl_fwd, _isotonic_kl_bwd)
 
 
-# Default implementation selector ("lax" everywhere; "pallas" opts the batched
-# forward into the TPU kernel; "minimax" is the O(n^2) vectorized closed form
-# for small n — identical semantics, shared backward).
-_DEFAULT_IMPL = {"value": "lax"}
-
-_IMPLS = ("lax", "pallas", "minimax")
+# ---------------------------------------------------------------------------
+# Backend selection: thin aliases over the dispatch registry (kept for
+# backward compatibility; see repro.kernels.dispatch for the registry).
+# ---------------------------------------------------------------------------
 
 
 def set_default_impl(impl: str) -> None:
-  assert impl in _IMPLS, impl
-  _DEFAULT_IMPL["value"] = impl
+  """Set the process-default backend ("auto" | "lax" | "pallas" | "minimax")."""
+  from repro.kernels import dispatch as _d
+  _d.set_default_backend(impl)
 
 
 @contextlib.contextmanager
 def use_impl(impl: str):
-  """Temporarily select the isotonic solver implementation (trace-time)."""
-  assert impl in _IMPLS, impl
-  prev = _DEFAULT_IMPL["value"]
-  _DEFAULT_IMPL["value"] = impl
-  try:
+  """Temporarily select the isotonic solver backend (trace-time)."""
+  from repro.kernels import dispatch as _d
+  with _d.use_backend(impl):
     yield
-  finally:
-    _DEFAULT_IMPL["value"] = prev

@@ -27,18 +27,25 @@ def soft_sort(
     regularization_strength: float = 1.0,
     regularization: str = "l2",
     direction: str = "DESCENDING",
+    impl: str | None = None,
 ) -> Array:
-  """Soft sort s_{eps*Psi}(theta) = P_Psi(rho/eps, theta)  (paper Eq. 5)."""
+  """Soft sort s_{eps*Psi}(theta) = P_Psi(rho/eps, theta)  (paper Eq. 5).
+
+  ``impl`` selects the isotonic backend ("auto" | "lax" | "pallas" |
+  "minimax"); None defers to the dispatch default (see
+  ``repro.kernels.dispatch``).
+  """
   if direction not in _DIRECTIONS:
     raise ValueError(f"direction must be one of {_DIRECTIONS}")
   values = jnp.asarray(values)
   if direction == "ASCENDING":
-    return -soft_sort(-values, regularization_strength, regularization)
+    return -soft_sort(-values, regularization_strength, regularization,
+                      impl=impl)
   eps = regularization_strength
   n = values.shape[-1]
   z = _rho(n, values.dtype) / eps
   z = jnp.broadcast_to(z, values.shape)
-  return projection_permutahedron(z, values, regularization)
+  return projection_permutahedron(z, values, regularization, impl)
 
 
 def soft_rank(
@@ -46,6 +53,7 @@ def soft_rank(
     regularization_strength: float = 1.0,
     regularization: str = "l2",
     direction: str = "DESCENDING",
+    impl: str | None = None,
 ) -> Array:
   """Soft rank r_{eps*Psi}(theta) = P_Psi(-theta/eps, rho)  (paper Eq. 6).
 
@@ -56,15 +64,17 @@ def soft_rank(
     raise ValueError(f"direction must be one of {_DIRECTIONS}")
   values = jnp.asarray(values)
   if direction == "ASCENDING":
-    return soft_rank(-values, regularization_strength, regularization)
+    return soft_rank(-values, regularization_strength, regularization,
+                     impl=impl)
   eps = regularization_strength
   n = values.shape[-1]
   w = _rho(n, values.dtype)
-  return projection_permutahedron(-values / eps, w, regularization)
+  return projection_permutahedron(-values / eps, w, regularization, impl)
 
 
 def soft_rank_kl_direct(
-    values: Array, regularization_strength: float = 1.0) -> Array:
+    values: Array, regularization_strength: float = 1.0,
+    impl: str | None = None) -> Array:
   """Appendix variant r~_E: KL projection directly onto P(rho) (not P(e^rho)).
 
   r~_{eps E}(theta) = exp(P_E(-theta/eps, log rho)).
@@ -73,7 +83,7 @@ def soft_rank_kl_direct(
   eps = regularization_strength
   n = values.shape[-1]
   w = jnp.log(_rho(n, values.dtype))
-  return jnp.exp(projection_permutahedron(-values / eps, w, "kl"))
+  return jnp.exp(projection_permutahedron(-values / eps, w, "kl", impl))
 
 
 def soft_topk_mask(
@@ -105,12 +115,13 @@ def soft_quantile(
     q: float,
     regularization_strength: float = 0.1,
     regularization: str = "l2",
+    impl: str | None = None,
 ) -> Array:
   """Differentiable q-quantile via the soft sort (ascending)."""
   values = jnp.asarray(values)
   n = values.shape[-1]
   s = soft_sort(values, regularization_strength, regularization,
-                direction="ASCENDING")
+                direction="ASCENDING", impl=impl)
   idx = jnp.clip(jnp.asarray(round(q * (n - 1)), jnp.int32), 0, n - 1)
   return s[..., idx]
 

@@ -1,0 +1,173 @@
+"""Backend dispatch for the batched isotonic/projection stack.
+
+Single choke point through which every soft-sort/rank forward pass routes:
+a registry mapping ``(op, regularization, backend)`` -> implementation.
+All registered implementations share the same contract — they take f32-safe
+arrays whose *last* axis is the problem dimension, flattened here to
+``(rows, n)``, and return the same shape — and they all share the exact
+O(n) segment-algebra VJP defined in ``repro.core.isotonic`` (the registry
+only ever dispatches forward passes).
+
+Backends
+--------
+* ``"lax"``      reference ``lax.fori_loop`` stack machine, natively batched
+                 (``repro.kernels.pav.pav_l2_lax`` / ``pav_kl_lax``).
+* ``"pallas"``   tiled TPU kernel (``repro.kernels.pav``); interpret mode
+                 off-TPU, so it is usable (slowly) everywhere.
+* ``"minimax"``  O(n^2) vectorized closed form (``repro.kernels.ref``) with
+                 zero data-dependent control flow — the right trade for
+                 small n and under SPMD.
+* ``"auto"``     resolves deterministically from platform and shape at trace
+                 time: TPU -> ``"pallas"``; otherwise ``"minimax"`` for
+                 small problems (n <= 64 and rows * n^2 bounded) else
+                 ``"lax"``.
+
+Selection precedence: explicit ``backend=`` argument > ``REPRO_BACKEND``
+environment variable > ``set_default_backend`` / ``use_backend`` (process
+default, initially ``"auto"``).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+ENV_VAR = "REPRO_BACKEND"
+
+BACKENDS = ("auto", "lax", "pallas", "minimax")
+
+# n at or below which the O(n^2) closed form beats the sequential machine
+# off-TPU (no while_loop, trivially vectorized; memory is rows * n^2 floats).
+AUTO_MINIMAX_MAX_N = 64
+
+# Cap on rows * n^2 f32 elements for auto-selecting minimax (~64 MB): a
+# large flattened batch at small n (the MoE-router regime) must fall back
+# to the O(rows * n) lax machine instead of materializing rows (n, n)
+# matrices.
+AUTO_MINIMAX_MAX_ELEMS = 16_000_000
+
+_REGISTRY: dict[tuple[str, str, str], Callable[..., Array]] = {}
+
+_DEFAULT = {"value": "auto"}
+
+
+def register(op: str, regularization: str, backend: str):
+  """Decorator: register ``fn`` as the (op, regularization, backend) impl."""
+
+  def deco(fn: Callable[..., Array]) -> Callable[..., Array]:
+    _REGISTRY[(op, regularization, backend)] = fn
+    return fn
+
+  return deco
+
+
+def registered_backends(op: str, regularization: str) -> tuple[str, ...]:
+  """Concrete (non-auto) backends registered for an (op, regularization)."""
+  return tuple(b for (o, r, b) in _REGISTRY
+               if o == op and r == regularization)
+
+
+def get_default_backend() -> str:
+  return _DEFAULT["value"]
+
+
+def set_default_backend(backend: str) -> None:
+  if backend not in BACKENDS:
+    raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+  _DEFAULT["value"] = backend
+
+
+@contextlib.contextmanager
+def use_backend(backend: str):
+  """Temporarily select the default backend (trace-time only: custom_vjp
+  fwd rules are traced lazily, so pass ``backend=`` explicitly under jit)."""
+  prev = _DEFAULT["value"]
+  set_default_backend(backend)
+  try:
+    yield
+  finally:
+    _DEFAULT["value"] = prev
+
+
+def resolve_backend(
+    op: str,
+    regularization: str,
+    backend: str | None = None,
+    *,
+    shape: tuple[int, ...] | None = None,
+    platform: str | None = None,
+) -> str:
+  """Resolve a possibly-None/"auto" backend request to a concrete backend.
+
+  Deterministic given (request, environment, platform, shape): the same
+  inputs always pick the same implementation, so a jit cache entry never
+  flips backends between traces.
+  """
+  b = backend or os.environ.get(ENV_VAR) or _DEFAULT["value"]
+  if b != "auto":
+    if (op, regularization, b) not in _REGISTRY:
+      raise ValueError(
+          f"no backend {b!r} registered for op={op!r}, "
+          f"regularization={regularization!r}; have "
+          f"{registered_backends(op, regularization)}")
+    return b
+  platform = platform or jax.default_backend()
+  if platform == "tpu":
+    return "pallas"
+  n = shape[-1] if shape else 0
+  rows = 1
+  for d in (shape[:-1] if shape else ()):
+    rows *= d
+  if n <= AUTO_MINIMAX_MAX_N and rows * n * n <= AUTO_MINIMAX_MAX_ELEMS:
+    return "minimax"
+  return "lax"
+
+
+def dispatch(op: str, regularization: str, backend: str | None,
+             *args: Array) -> Array:
+  """Route a batched forward pass to the resolved backend.
+
+  All ``args`` must share a common shape whose last axis is the problem
+  dimension; leading batch axes are flattened to a single row axis before
+  the backend call and restored afterwards, so backends only ever see
+  (rows, n).
+  """
+  shape = args[0].shape
+  b = resolve_backend(op, regularization, backend, shape=shape)
+  fn = _REGISTRY[(op, regularization, b)]
+  n = shape[-1]
+  flat = [a.reshape(-1, n) for a in args]
+  return fn(*flat).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Backend registration (isotonic optimization, paper §5).
+# ---------------------------------------------------------------------------
+
+from repro.kernels import pav as _pav  # noqa: E402
+from repro.kernels import ref as _ref  # noqa: E402
+
+register("isotonic", "l2", "lax")(_pav.pav_l2_lax)
+register("isotonic", "kl", "lax")(_pav.pav_kl_lax)
+
+register("isotonic", "l2", "pallas")(_pav.pav_l2)
+register("isotonic", "kl", "pallas")(_pav.pav_kl)
+
+
+@register("isotonic", "l2", "minimax")
+def _pav_l2_minimax(y: Array) -> Array:
+  # promote (not downcast): f64 stays f64 under x64, halves compute in f32
+  yc = y.astype(jnp.promote_types(y.dtype, jnp.float32))
+  return _ref.pav_l2_ref(yc).astype(y.dtype)
+
+
+@register("isotonic", "kl", "minimax")
+def _pav_kl_minimax(s: Array, w: Array) -> Array:
+  dt = jnp.promote_types(s.dtype, jnp.float32)
+  return _ref.pav_kl_ref(s.astype(dt), w.astype(dt)).astype(s.dtype)

@@ -1,15 +1,16 @@
 """Jitted public wrappers for the Pallas kernels.
 
-``repro.core.isotonic`` routes its batched forward passes here when
-``set_default_impl('pallas')`` is active; the custom VJPs in core are shared
-(the backward is implementation-independent segment algebra).
+``repro.kernels.dispatch`` routes the batched isotonic forward passes here
+when the ``"pallas"`` backend is selected (default on TPU under ``"auto"``);
+the custom VJPs in core are shared (the backward is backend-independent
+segment algebra).  ``pav_l2_lax`` / ``pav_kl_lax`` are the same stack
+machine run as plain lax code — the ``"lax"`` reference backend.
 """
 
 from __future__ import annotations
 
-import jax
-
-from repro.kernels.pav import pav_kl, pav_l2
+from repro.kernels.pav import pav_kl, pav_kl_lax, pav_l2, pav_l2_lax
 from repro.kernels.soft_topk import soft_topk_gates
 
-__all__ = ["pav_l2", "pav_kl", "soft_topk_gates"]
+__all__ = ["pav_l2", "pav_kl", "pav_l2_lax", "pav_kl_lax",
+           "soft_topk_gates"]

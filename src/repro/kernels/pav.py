@@ -15,6 +15,12 @@ vectors).  The kernel therefore:
 Both the quadratic (Eq. 7) and entropic (Eq. 8) block aggregates are
 supported; the entropic variant tracks per-block log-sum-exps and merges
 with logaddexp so it is exactly as stable as the reference.
+
+The same lane-wise stack machine doubles as the ``"lax"`` reference backend
+(``pav_l2_lax`` / ``pav_kl_lax``): it runs directly on the full (B, N) batch
+as plain ``lax.fori_loop`` code, no ``pallas_call`` and no per-row vmap, so
+the reference and the kernel share one implementation of the algorithm and
+differ only in how rows are tiled onto the hardware.
 """
 
 from __future__ import annotations
@@ -29,6 +35,27 @@ from jax.experimental import pallas as pl
 Array = jax.Array
 
 DEFAULT_ROW_TILE = 8
+
+# VMEM budget per input block: the stack machine keeps ~6 (R, N) f32 arrays
+# live (registers, starts, output), so bound R * N * 4 B * 6 by ~2 MiB.
+_VMEM_BLOCK_BYTES = 2 * 1024 * 1024
+_MAX_ROW_TILE = 256
+
+
+def auto_row_tile(n: int, batch: int | None = None) -> int:
+  """Largest power-of-two row tile whose working set fits the VMEM budget.
+
+  May drop below the f32 sublane count (8) for very large n — Mosaic pads
+  sub-sublane blocks internally, which wastes lanes but keeps the working
+  set inside the budget instead of overflowing VMEM.  ``batch`` caps the
+  tile so a small batch is never padded far past its own row count.
+  """
+  rows = max(1, _VMEM_BLOCK_BYTES // (6 * 4 * max(1, n)))
+  tile = 1 << (rows.bit_length() - 1)
+  if batch is not None and batch > 0:
+    # next power of two >= batch
+    tile = min(tile, 1 << (batch - 1).bit_length() if batch > 1 else 1)
+  return int(min(_MAX_ROW_TILE, max(1, tile)))
 
 
 def _take(arr: Array, idx: Array) -> Array:
@@ -55,7 +82,7 @@ def _pav_body(y_like, init_cur, merge, block_value):
   """
   r, n = y_like.shape
   num_regs = len(init_cur(0))
-  regs0 = tuple(jnp.zeros((r, n), jnp.float32) for _ in range(num_regs))
+  regs0 = tuple(jnp.zeros((r, n), y_like.dtype) for _ in range(num_regs))
   starts0 = jnp.zeros((r, n), jnp.int32)
   top0 = jnp.full((r,), -1, jnp.int32)
 
@@ -110,7 +137,7 @@ def _expand(starts: Array, vals: Array, top: Array, n: int) -> Array:
     return cur, out
 
   cur0 = jnp.zeros((r,), jnp.int32)
-  out0 = jnp.zeros((r, n), jnp.float32)
+  out0 = jnp.zeros((r, n), vals.dtype)
   _, out = lax.fori_loop(0, n, step, (cur0, out0))
   return out
 
@@ -166,11 +193,16 @@ def _pad_rows(x: Array, row_tile: int) -> tuple[Array, int]:
 
 
 @functools.partial(jax.jit, static_argnames=("row_tile", "interpret"))
-def pav_l2(y: Array, *, row_tile: int = DEFAULT_ROW_TILE,
+def pav_l2(y: Array, *, row_tile: int | None = None,
            interpret: bool | None = None) -> Array:
-  """Batched isotonic regression (non-increasing), y: (B, N) -> (B, N)."""
+  """Batched isotonic regression (non-increasing), y: (B, N) -> (B, N).
+
+  ``row_tile=None`` picks the largest VMEM-safe batch tile for N.
+  """
   if interpret is None:
     interpret = jax.default_backend() != "tpu"
+  if row_tile is None:
+    row_tile = auto_row_tile(y.shape[-1], y.shape[0])
   y32 = y.astype(jnp.float32)
   padded, b = _pad_rows(y32, row_tile)
   out = _call(_pav_l2_kernel, (padded,), row_tile, interpret)
@@ -178,13 +210,49 @@ def pav_l2(y: Array, *, row_tile: int = DEFAULT_ROW_TILE,
 
 
 @functools.partial(jax.jit, static_argnames=("row_tile", "interpret"))
-def pav_kl(s: Array, w: Array, *, row_tile: int = DEFAULT_ROW_TILE,
+def pav_kl(s: Array, w: Array, *, row_tile: int | None = None,
            interpret: bool | None = None) -> Array:
   """Batched entropic isotonic optimization, (B, N) x (B, N) -> (B, N)."""
   if interpret is None:
     interpret = jax.default_backend() != "tpu"
+  if row_tile is None:
+    row_tile = auto_row_tile(s.shape[-1], s.shape[0])
   s32, w32 = s.astype(jnp.float32), w.astype(jnp.float32)
   ps, b = _pad_rows(s32, row_tile)
   pw, _ = _pad_rows(w32, row_tile)
   out = _call(_pav_kl_kernel, (ps, pw), row_tile, interpret)
   return out[:b].astype(s.dtype)
+
+
+# ---------------------------------------------------------------------------
+# "lax" reference backend: the same stack machine, no pallas_call.
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def pav_l2_lax(y: Array) -> Array:
+  """Batched isotonic regression on (B, N) via the plain-lax stack machine."""
+  # float64 inputs (x64 mode) keep full precision; halves compute in f32.
+  yc = y.astype(jnp.promote_types(y.dtype, jnp.float32))
+  starts, vals, top = _pav_body(
+      yc,
+      init_cur=lambda i: (yc[:, i], jnp.ones((yc.shape[0],), yc.dtype)),
+      merge=lambda cur, pop: (cur[0] + pop[0], cur[1] + pop[1]),
+      block_value=lambda regs: regs[0] / jnp.maximum(regs[1], 1e-30),
+  )
+  return _expand(starts, vals, top, y.shape[-1]).astype(y.dtype)
+
+
+@jax.jit
+def pav_kl_lax(s: Array, w: Array) -> Array:
+  """Batched entropic isotonic optimization on (B, N), plain-lax machine."""
+  dt = jnp.promote_types(s.dtype, jnp.float32)
+  sc, wc = s.astype(dt), w.astype(dt)
+  starts, vals, top = _pav_body(
+      sc,
+      init_cur=lambda i: (sc[:, i], wc[:, i]),
+      merge=lambda cur, pop: (jnp.logaddexp(cur[0], pop[0]),
+                              jnp.logaddexp(cur[1], pop[1])),
+      block_value=lambda regs: regs[0] - regs[1],
+  )
+  return _expand(starts, vals, top, s.shape[-1]).astype(s.dtype)

@@ -37,13 +37,16 @@ def _minimax(gamma: Array) -> Array:
 def pav_l2_ref(y: Array) -> Array:
   """Isotonic regression (non-increasing fit) via minimax. Last axis."""
   n = y.shape[-1]
-  c = jnp.cumsum(y, axis=-1)
-  c = jnp.concatenate([jnp.zeros_like(c[..., :1]), c], axis=-1)  # (.., n+1)
-  hi = c[..., 1:][..., None, :]          # indexed by k:   (.., 1, n)
-  lo = c[..., :n][..., :, None]          # indexed by j:   (.., n, 1)
-  sums = hi - lo                         # sums[..,j,k] = sum(y[j..k])
   j = jnp.arange(n)[:, None]
   k = jnp.arange(n)[None, :]
+  # sums[.., j, k] = sum(y[j..k]) via a masked pairwise scan along k.
+  # Costs log2(n) passes over the (n, n) matrix where a cumsum difference
+  # is one pass, but avoids its cancellation error (cumsums grow to
+  # O(n * max|y|) while interval sums stay small) — needed to keep the
+  # minimax backend within 1e-5 of lax at soft-sort dynamic ranges.
+  yk = jnp.broadcast_to(y[..., None, :], y.shape[:-1] + (n, n))
+  g = jnp.where(j <= k, yk, jnp.zeros_like(yk))
+  sums = jax.lax.associative_scan(jnp.add, g, axis=g.ndim - 1)
   length = jnp.maximum((k - j + 1), 1).astype(y.dtype)
   return _minimax(sums / length)
 
@@ -51,15 +54,18 @@ def pav_l2_ref(y: Array) -> Array:
 def pav_kl_ref(s: Array, w: Array) -> Array:
   """Entropic isotonic optimization via minimax on LSE-difference gammas."""
   n = s.shape[-1]
+  j = jnp.arange(n)[:, None]
+  k = jnp.arange(n)[None, :]
 
   def interval_lse(x: Array) -> Array:
-    m = jnp.max(x, axis=-1, keepdims=True)
-    c = jnp.cumsum(jnp.exp(x - m), axis=-1)
-    c = jnp.concatenate([jnp.zeros_like(c[..., :1]), c], axis=-1)
-    hi = c[..., 1:][..., None, :]
-    lo = c[..., :n][..., :, None]
-    val = jnp.clip(hi - lo, 1e-38, None)
-    return jnp.log(val) + m[..., None]
+    # interval_lse[..., j, k] = LSE(x[j..k]) via a masked logaddexp scan
+    # along k.  A cumsum-of-exp difference would cancel catastrophically
+    # for intervals far below the row max (exactly the regime soft-sort
+    # hits: x = rho/eps spans n/eps); pairwise logaddexp is stable at any
+    # dynamic range.
+    xk = jnp.broadcast_to(x[..., None, :], x.shape[:-1] + (n, n))
+    g = jnp.where(j <= k, xk, _NEG)
+    return jax.lax.associative_scan(jnp.logaddexp, g, axis=g.ndim - 1)
 
   gamma = interval_lse(s) - interval_lse(w)
   return _minimax(gamma)

@@ -10,17 +10,25 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+  # jax < 0.5 has no jax.sharding.AxisType; Auto is that build's only
+  # behavior, so omitting the kwarg there is semantically identical.
+  axis_type = getattr(jax.sharding, "AxisType", None)
+  if axis_type is None:
+    return jax.make_mesh(shape, axes)
+  return jax.make_mesh(
+      shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
   shape = (2, 16, 16) if multi_pod else (16, 16)
   axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-  return jax.make_mesh(
-      shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+  return _make_mesh(shape, axes)
 
 
 def make_debug_mesh(shape=(2, 4), axes=("data", "model")):
   """Small mesh for CPU tests (requires >= prod(shape) host devices)."""
-  return jax.make_mesh(
-      shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+  return _make_mesh(shape, axes)
 
 
 def data_axes_of(mesh) -> tuple[str, ...]:

@@ -5,14 +5,20 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import set_default_impl, soft_rank, soft_topk_mask
+from repro.core import soft_rank, soft_topk_mask
+from repro.core.isotonic import use_impl
 from repro.kernels.ops import pav_kl, pav_l2, soft_topk_gates
 from repro.kernels.ref import pav_kl_ref, pav_l2_ref, soft_topk_gates_ref
 from repro.kernels.soft_topk import _bitonic
 
 rng = np.random.default_rng(3)
 
-SHAPES = [(1, 1), (3, 5), (8, 16), (13, 64), (5, 128), (2, 200)]
+# Interpret-mode pallas_call compiles slowly per shape on CPU: keep a small
+# representative sweep in the fast tier, push the large shapes to -m slow.
+SHAPES = [(1, 1), (3, 5), (8, 16)] + [
+    pytest.param(s, marks=pytest.mark.slow)
+    for s in [(13, 64), (5, 128), (2, 200)]
+]
 
 
 @pytest.mark.parametrize("shape", SHAPES)
@@ -37,8 +43,10 @@ def test_pav_kl_kernel_matches_ref(shape):
   np.testing.assert_allclose(got, want, atol=5e-4)
 
 
-@pytest.mark.parametrize("t,e,k", [(1, 2, 1), (5, 8, 2), (7, 64, 6),
-                                   (130, 16, 3), (9, 100, 7), (256, 32, 4)])
+@pytest.mark.parametrize("t,e,k", [(1, 2, 1), (5, 8, 2)] + [
+    pytest.param(*p, marks=pytest.mark.slow)
+    for p in [(7, 64, 6), (130, 16, 3), (9, 100, 7), (256, 32, 4)]
+])
 def test_soft_topk_kernel_matches_ref_and_core(t, e, k):
   logits = jnp.array(rng.normal(size=(t, e)).astype(np.float32))
   got = soft_topk_gates(logits, k, 0.7)
@@ -49,7 +57,8 @@ def test_soft_topk_kernel_matches_ref_and_core(t, e, k):
   np.testing.assert_allclose(got.sum(-1), np.full(t, k), atol=1e-3)
 
 
-@pytest.mark.parametrize("n", [2, 8, 64, 128])
+@pytest.mark.parametrize("n", [2, 8, 64,
+                               pytest.param(128, marks=pytest.mark.slow)])
 def test_bitonic_network_sorts(n):
   keys = jnp.array(rng.normal(size=(6, n)).astype(np.float32))
   payload = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (6, n))
@@ -62,22 +71,18 @@ def test_bitonic_network_sorts(n):
 
 
 def test_pallas_impl_through_core_ops():
-  set_default_impl("pallas")
-  try:
-    th = jnp.array(rng.normal(size=(4, 12)).astype(np.float32))
+  th = jnp.array(rng.normal(size=(4, 12)).astype(np.float32))
+  with use_impl("pallas"):
     r_pallas = soft_rank(th, 0.3)
-  finally:
-    set_default_impl("lax")
-  r_lax = soft_rank(th, 0.3)
+  with use_impl("lax"):
+    r_lax = soft_rank(th, 0.3)
   np.testing.assert_allclose(r_pallas, r_lax, atol=1e-5)
 
 
 def test_grad_flows_through_pallas_forward():
   th = jnp.array(rng.normal(size=(3, 9)).astype(np.float32))
-  set_default_impl("pallas")
-  try:
+  with use_impl("pallas"):
     g = jax.grad(lambda x: jnp.sum(soft_rank(x, 0.5) ** 2))(th)
-  finally:
-    set_default_impl("lax")
-  g2 = jax.grad(lambda x: jnp.sum(soft_rank(x, 0.5) ** 2))(th)
+  with use_impl("lax"):
+    g2 = jax.grad(lambda x: jnp.sum(soft_rank(x, 0.5) ** 2))(th)
   np.testing.assert_allclose(g, g2, atol=1e-5)

@@ -3,6 +3,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (pip install -e .[dev])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import soft_rank, soft_sort, soft_topk_mask

@@ -42,10 +42,10 @@ def test_adamw_clipping():
 
 
 def test_quantile_clip_adapts():
-  cfg = adamw.AdamWConfig(lr=0.01, quantile_clip=0.5, quantile_window=8)
+  cfg = adamw.AdamWConfig(lr=0.01, quantile_clip=0.5, quantile_window=4)
   p = {"w": jnp.ones((4,))}
   st = adamw.init(cfg, p)
-  for i in range(10):
+  for i in range(6):
     g = {"w": jnp.full((4,), 0.1 * (i + 1))}
     p, st, metrics = adamw.update(cfg, g, st, p)
   # clip threshold should now reflect the observed norms, not the default

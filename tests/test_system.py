@@ -78,6 +78,7 @@ def test_allpairs_baseline_converges_to_hard_ranks():
       r, hard_rank(theta, "DESCENDING"), atol=1e-3)
 
 
+@pytest.mark.slow
 def test_compressed_gradient_training_step():
   from repro.configs.smoke import smoke_config
   from repro.launch import steps as ST
@@ -98,6 +99,7 @@ def test_compressed_gradient_training_step():
   assert "ef_residual" in o2
 
 
+@pytest.mark.slow
 def test_grad_accum_equivalence():
   """grad_accum=2 must match a single full-batch step (same grads/params)."""
   import dataclasses
