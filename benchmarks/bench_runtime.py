@@ -23,10 +23,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn, write_json
+from benchmarks.common import emit, time_fn
 from repro.core import soft_rank
 from repro.core.baselines import allpairs_rank, ot_rank
 from repro.kernels import dispatch as dispatch_mod
+from repro.obs import artifacts as obs_artifacts
 
 BATCH = 8
 NS = (100, 500, 1000, 2000)      # paper used up to 5000 on GPU; CPU-scaled
@@ -96,7 +97,10 @@ def _feasibility(backend: str, n: int, batch: int, platform: str) -> str:
 
 def run_backend_sweep(smoke: bool = False,
                       out_path: str = "BENCH_runtime.json") -> dict:
-  """Time soft_rank fwd and fwd+bwd per backend over n x batch; write JSON."""
+  """Time soft_rank fwd and fwd+bwd per backend over n x batch; write the
+  schema-v1 ``BENCH_runtime.json`` artifact (repro.obs.artifacts), whose
+  ``metrics`` block carries the per-backend dispatch-resolution counters
+  accumulated during the sweep."""
   platform = jax.default_backend()
   ns = SMOKE_NS if smoke else SWEEP_NS
   batches = SMOKE_BATCHES if smoke else SWEEP_BATCHES
@@ -110,38 +114,36 @@ def run_backend_sweep(smoke: bool = False,
       theta = jnp.array(rng.normal(size=(batch, n)).astype(np.float32))
       for backend in sorted(set(backends)):
         for reg in ("l2", "kl"):
-          rec = {"op": "soft_rank", "regularization": reg,
+          name = f"backend_sweep/{reg}/{backend}/n={n}/b={batch}"
+          rec = {"name": name, "op": "soft_rank", "regularization": reg,
                  "backend": backend, "n": n, "batch": batch}
           skip = _feasibility(backend, n, batch, platform)
           if skip:
             rec["skipped"] = skip
             results.append(rec)
-            emit(f"backend_sweep/{reg}/{backend}/n={n}/b={batch}",
-                 float("nan"), f"skipped: {skip}")
+            emit(name, float("nan"), f"skipped: {skip}", collect=False)
             continue
           fwd = jax.jit(functools.partial(
               soft_rank, regularization_strength=0.1, regularization=reg,
               impl=backend))
-          rec["fwd_us"] = time_fn(fwd, theta, warmup=1, iters=iters)
+          rec["fwd_us"] = time_fn(fwd, theta, warmup=1, iters=iters,
+                                  name=name)
           bwd = jax.jit(jax.grad(lambda t, f=fwd: jnp.sum(f(t) ** 2)))
-          rec["fwd_bwd_us"] = time_fn(bwd, theta, warmup=1, iters=iters)
+          rec["fwd_bwd_us"] = time_fn(bwd, theta, warmup=1, iters=iters,
+                                      name=name + "/bwd")
           results.append(rec)
-          emit(f"backend_sweep/{reg}/{backend}/n={n}/b={batch}",
-               rec["fwd_us"], f"fwd; bwd={rec['fwd_bwd_us']:.1f}us")
+          emit(name, rec["fwd_us"], f"fwd; bwd={rec['fwd_bwd_us']:.1f}us",
+               collect=False)
 
-  payload = {
-      "meta": {
-          "platform": platform,
-          "jax": jax.__version__,
-          "smoke": smoke,
-          "auto_resolves_to": dispatch_mod.resolve_backend(
-              "isotonic", "l2", None, shape=(max(batches), max(ns)),
-              platform=platform),
-      },
-      "results": results,
-  }
-  write_json(out_path, payload)
-  return payload
+  meta = obs_artifacts.collect_meta(
+      smoke=smoke,
+      suite="backend_sweep",
+      default_backend=dispatch_mod.get_default_backend(),
+      auto_resolves_to=dispatch_mod.resolve_backend(
+          "isotonic", "l2", None, shape=(max(batches), max(ns)),
+          platform=platform),
+  )
+  return obs_artifacts.write_bench_artifact(out_path, results, meta)
 
 
 if __name__ == "__main__":

@@ -1,32 +1,52 @@
-"""Benchmark utilities: timing + CSV/JSON emission."""
+"""Benchmark utilities: timing, CSV emission, structured result capture.
+
+Timing is delegated to ``repro.obs.timing`` (the one wall-clock
+implementation shared with the launch drivers).  ``emit`` keeps the legacy
+``name,us_per_call,derived`` CSV row on stdout *and* captures a structured
+record into a process-global collector; ``benchmarks/run.py`` drains the
+collector into a schema-v1 ``BENCH_*.json`` artifact via
+``repro.obs.artifacts`` (see docs/BENCHMARKS.md for the schema).
+"""
 
 from __future__ import annotations
 
-import json
-import time
+import math
 
-import jax
+from repro.obs import timing as obs_timing
+
+# Structured records accumulated by ``emit``; drained by benchmarks/run.py.
+_RESULTS: list[dict] = []
 
 
-def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5,
+            name: str | None = None) -> float:
   """Median wall time per call in microseconds (jit-compiled fn)."""
-  for _ in range(warmup):
-    jax.block_until_ready(fn(*args))
-  times = []
-  for _ in range(iters):
-    t0 = time.perf_counter()
-    jax.block_until_ready(fn(*args))
-    times.append(time.perf_counter() - t0)
-  times.sort()
-  return times[len(times) // 2] * 1e6
+  return obs_timing.time_fn(fn, *args, warmup=warmup, iters=iters, name=name)
 
 
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
+def emit(name: str, us_per_call: float, derived: str = "",
+         collect: bool = True, **fields) -> None:
+  """Print the CSV row and (by default) capture a structured result.
+
+  Non-finite ``us_per_call`` (NaN marks a skipped combination) is recorded
+  as a ``skipped`` reason rather than a bogus timing, matching the artifact
+  schema's result contract.
+  """
   print(f"{name},{us_per_call:.1f},{derived}")
+  if not collect:
+    return
+  rec: dict = {"name": name, **fields}
+  if derived:
+    rec["derived"] = derived
+  if math.isfinite(us_per_call) and us_per_call >= 0:
+    rec["wall_us"] = float(us_per_call)
+  else:
+    rec["skipped"] = derived or "not measured"
+  _RESULTS.append(rec)
 
 
-def write_json(path: str, payload: dict) -> None:
-  """Write a benchmark artifact (CI uploads BENCH_*.json files)."""
-  with open(path, "w") as f:
-    json.dump(payload, f, indent=2, sort_keys=True)
-  print(f"wrote {path}")
+def drain_results() -> list[dict]:
+  """Return and clear all structured records captured since the last drain."""
+  out = list(_RESULTS)
+  _RESULTS.clear()
+  return out

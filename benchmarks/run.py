@@ -2,12 +2,24 @@
 
   PYTHONPATH=src python -m benchmarks.run [--only fig4_runtime,...] [--smoke]
 
-Output: ``name,us_per_call,derived`` CSV on stdout, plus ``BENCH_*.json``
-artifacts (currently ``BENCH_runtime.json`` from the dispatch-backend
-sweep) in the working directory — CI uploads these.
+Output: ``name,us_per_call,derived`` CSV on stdout, plus structured
+``BENCH_*.json`` artifacts (schema ``repro.bench/v1``, see
+docs/BENCHMARKS.md) in the working directory — CI validates and uploads
+these:
+
+* ``BENCH_runtime.json`` — the dispatch-backend sweep (fwd / fwd+bwd
+  us/call per ``(regularization, backend, n, batch)`` cell), emitted by
+  both the full run and ``--smoke``;
+* ``BENCH_figures.json`` — every other paper-figure/table benchmark row,
+  emitted by the full run.
+
+Both artifacts embed the ``repro.obs`` metrics snapshot (per-backend
+dispatch-resolution counters, shape buckets, trace-cache counts) taken at
+write time, plus provenance meta (git sha, platform, jax version).
 
 ``--smoke`` runs only the backend sweep at reduced sizes: a fast signal
-that every registered backend still executes and emits the artifact.
+that every registered backend still executes and emits a schema-valid
+artifact.
 """
 
 from __future__ import annotations
@@ -22,7 +34,10 @@ from benchmarks import (
     bench_router,
     bench_runtime,
     bench_topk,
+    common,
 )
+from repro.obs import artifacts as obs_artifacts
+from repro.obs import metrics as obs_metrics
 
 BENCHES = {
     "fig4_runtime": bench_runtime.run,        # Figure 4 (right)
@@ -42,6 +57,10 @@ def main() -> None:
                   help="tiny backend sweep only; still writes BENCH_*.json")
   args = ap.parse_args()
 
+  # Start each harness invocation from a clean registry so artifact metrics
+  # describe exactly this run, not whatever imported us earlier.
+  obs_metrics.reset()
+
   print("name,us_per_call,derived")
   if args.smoke:
     bench_runtime.run_backend_sweep(smoke=True)
@@ -55,6 +74,13 @@ def main() -> None:
     except Exception:  # keep the harness going; report at the end
       failed.append(name)
       traceback.print_exc(file=sys.stderr)
+
+  results = common.drain_results()
+  if results:
+    obs_artifacts.write_bench_artifact(
+        "BENCH_figures.json", results,
+        obs_artifacts.collect_meta(suite="figures", smoke=False,
+                                   only=args.only or "all"))
   if failed:
     print(f"FAILED: {failed}", file=sys.stderr)
     raise SystemExit(1)

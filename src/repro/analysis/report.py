@@ -1,6 +1,9 @@
-"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from cell JSONs.
+"""Generate EXPERIMENTS.md tables: §Dry-run / §Roofline from cell JSONs,
+plus §Benchmarks / §Dispatch metrics from schema-v1 ``BENCH_*.json``
+artifacts (repro.obs.artifacts; see docs/BENCHMARKS.md).
 
-  PYTHONPATH=src python -m repro.analysis.report [--dir experiments/dryrun]
+  PYTHONPATH=src python -m repro.analysis.report [--dir experiments/dryrun] \
+      [--bench 'BENCH_*.json']
 """
 
 from __future__ import annotations
@@ -9,6 +12,8 @@ import argparse
 import glob
 import json
 import os
+
+from repro.obs import artifacts as obs_artifacts
 
 
 def load_cells(directory: str, mesh: str = "single", tagged: bool = False):
@@ -80,9 +85,66 @@ def dryrun_table(cells, cells_multi) -> str:
   return hdr + "\n".join(rows)
 
 
+def bench_table(payload: dict) -> str:
+  """Markdown table of one BENCH artifact's results (timed + skipped)."""
+  hdr = ("| name | backend | shape | us/call | fwd+bwd us | notes |\n"
+         "|---|---|---|---|---|---|\n")
+  rows = []
+  for rec in payload.get("results", []):
+    shape = ""
+    if "n" in rec or "batch" in rec:
+      shape = f"b={rec.get('batch', '?')}, n={rec.get('n', '?')}"
+    if "skipped" in rec:
+      rows.append(f"| {rec.get('name', '?')} | {rec.get('backend', '—')} | "
+                  f"{shape} | — | — | skipped: {rec['skipped'][:60]} |")
+      continue
+    us = rec.get("fwd_us", rec.get("wall_us"))
+    us_txt = f"{us:.1f}" if isinstance(us, (int, float)) else "—"
+    bwd = rec.get("fwd_bwd_us")
+    bwd_txt = f"{bwd:.1f}" if isinstance(bwd, (int, float)) else "—"
+    extra = rec.get("derived", "")
+    rows.append(f"| {rec.get('name', '?')} | {rec.get('backend', '—')} | "
+                f"{shape} | {us_txt} | {bwd_txt} | {extra} |")
+  return hdr + "\n".join(rows)
+
+
+def metrics_table(payload: dict) -> str:
+  """Markdown table of the dispatch counters embedded in an artifact."""
+  counters = payload.get("metrics", {}).get("counters", {})
+  dispatch = {k: v for k, v in sorted(counters.items())
+              if k.startswith("dispatch_")}
+  if not dispatch:
+    return "_no dispatch counters recorded (REPRO_METRICS disabled?)_"
+  hdr = "| counter | value |\n|---|---|\n"
+  return hdr + "\n".join(f"| `{k}` | {v} |" for k, v in dispatch.items())
+
+
+def bench_sections(pattern: str) -> str:
+  """§Benchmarks + §Dispatch metrics for every artifact matching pattern."""
+  chunks = []
+  for path in sorted(glob.glob(pattern)):
+    errors = obs_artifacts.validate_file(path)
+    if errors:
+      chunks.append(f"## §Benchmarks — {os.path.basename(path)}\n\n"
+                    f"INVALID artifact:\n" +
+                    "\n".join(f"* {e}" for e in errors))
+      continue
+    payload = json.load(open(path))
+    meta = payload["meta"]
+    prov = (f"platform `{meta['platform']}`, jax `{meta['jax']}`, "
+            f"sha `{meta['git_sha'][:12]}`")
+    chunks.append(f"## §Benchmarks — {os.path.basename(path)} ({prov})\n\n"
+                  + bench_table(payload)
+                  + "\n\n### §Dispatch metrics\n\n" + metrics_table(payload))
+  return "\n\n".join(chunks) if chunks else (
+      f"_no artifacts match {pattern!r}_")
+
+
 def main():
   ap = argparse.ArgumentParser()
   ap.add_argument("--dir", default="experiments/dryrun")
+  ap.add_argument("--bench", default=None, metavar="GLOB",
+                  help="also render BENCH_*.json artifacts matching GLOB")
   args = ap.parse_args()
   single = load_cells(args.dir, "single")
   multi = load_cells(args.dir, "multi")
@@ -91,6 +153,9 @@ def main():
   print(dryrun_table(single, multi))
   print("\n## §Roofline (single-pod, per assignment)\n")
   print(roofline_table(single))
+  if args.bench:
+    print()
+    print(bench_sections(args.bench))
 
 
 if __name__ == "__main__":

@@ -29,11 +29,38 @@ def soft_sort(
     direction: str = "DESCENDING",
     impl: str | None = None,
 ) -> Array:
-  """Soft sort s_{eps*Psi}(theta) = P_Psi(rho/eps, theta)  (paper Eq. 5).
+  """Soft sort: s_{eps*Psi}(theta) = P_Psi(rho/eps, theta) (paper Eq. 5).
 
-  ``impl`` selects the isotonic backend ("auto" | "lax" | "pallas" |
-  "minimax"); None defers to the dispatch default (see
-  ``repro.kernels.dispatch``).
+  Parameters
+  ----------
+  values : Array, shape (..., n)
+      Input scores; the operator acts on the last axis, arbitrary leading
+      batch dimensions are supported.
+  regularization_strength : float
+      eps > 0. As eps -> 0 the output approaches the hard sort (exactly
+      hard for eps <= eps_min, Lemma 3); as eps -> inf it collapses
+      toward a constant vector (l2) / rescaling (kl).
+  regularization : {"l2", "kl"}
+      Psi. "l2" is the paper's quadratic Q; "kl" the entropic E
+      (projection carried out in log space).
+  direction : {"DESCENDING", "ASCENDING"}
+      "DESCENDING" (paper primitive) returns values softly sorted from
+      largest to smallest; "ASCENDING" is -soft_sort(-values).
+  impl : {"auto", "lax", "pallas", "minimax"} or None
+      Isotonic backend; None defers to the dispatch default
+      (``repro.kernels.dispatch``). Pass explicitly under jit/grad.
+
+  Returns
+  -------
+  Array, shape (..., n)
+      The soft-sorted vector(s).
+
+  Notes
+  -----
+  Cost is O(n log n) per row — one descending sort plus a linear-time
+  PAV isotonic solve (paper §5) — versus O(n^2) for All-pairs and
+  O(T n^2) for OT/Sinkhorn relaxations. The backward pass is the exact
+  O(n) segment-algebra VJP of Lemma 2, never unrolled solver iterates.
   """
   if direction not in _DIRECTIONS:
     raise ValueError(f"direction must be one of {_DIRECTIONS}")
@@ -55,10 +82,34 @@ def soft_rank(
     direction: str = "DESCENDING",
     impl: str | None = None,
 ) -> Array:
-  """Soft rank r_{eps*Psi}(theta) = P_Psi(-theta/eps, rho)  (paper Eq. 6).
+  """Soft rank: r_{eps*Psi}(theta) = P_Psi(-theta/eps, rho) (paper Eq. 6).
 
-  DESCENDING (paper default): rank 1 for the largest value.
-  ASCENDING: rank 1 for the smallest value ( = descending rank of -theta ).
+  Parameters
+  ----------
+  values : Array, shape (..., n)
+      Input scores (last axis; arbitrary leading batch dimensions).
+  regularization_strength : float
+      eps > 0; eps -> 0 recovers the hard ranks exactly (Lemma 3),
+      larger eps trades fidelity for smoother gradients.
+  regularization : {"l2", "kl"}
+      Psi: quadratic Q or entropic E (paper §3).
+  direction : {"DESCENDING", "ASCENDING"}
+      "DESCENDING" (paper default): rank 1 for the largest value.
+      "ASCENDING": rank 1 for the smallest ( = descending rank of
+      -theta ).
+  impl : {"auto", "lax", "pallas", "minimax"} or None
+      Isotonic backend; see ``repro.kernels.dispatch``. Pass explicitly
+      under jit/grad.
+
+  Returns
+  -------
+  Array, shape (..., n)
+      Soft ranks in [1, n]; differentiable everywhere in theta.
+
+  Notes
+  -----
+  O(n log n) per row (sort + linear PAV, §5) with the exact O(n) VJP of
+  Lemma 2 — the differentiability does not cost an O(n^2) Jacobian.
   """
   if direction not in _DIRECTIONS:
     raise ValueError(f"direction must be one of {_DIRECTIONS}")
@@ -75,9 +126,28 @@ def soft_rank(
 def soft_rank_kl_direct(
     values: Array, regularization_strength: float = 1.0,
     impl: str | None = None) -> Array:
-  """Appendix variant r~_E: KL projection directly onto P(rho) (not P(e^rho)).
+  """Appendix variant r~_E: KL projection directly onto P(rho), not P(e^rho).
 
   r~_{eps E}(theta) = exp(P_E(-theta/eps, log rho)).
+
+  Parameters
+  ----------
+  values : Array, shape (..., n)
+      Input scores (last axis).
+  regularization_strength : float
+      eps > 0.
+  impl : {"auto", "lax", "pallas", "minimax"} or None
+      Isotonic backend (``repro.kernels.dispatch``).
+
+  Returns
+  -------
+  Array, shape (..., n)
+      Strictly positive soft ranks (the exp of a log-space projection).
+
+  Notes
+  -----
+  Same O(n log n) forward / O(n) backward as ``soft_rank``; only the
+  target polytope differs (paper appendix discussion of r~_E).
   """
   values = jnp.asarray(values)
   eps = regularization_strength
@@ -95,10 +165,36 @@ def soft_topk_mask(
 ) -> Array:
   """Differentiable top-k indicator in [0, 1]^n summing to k.
 
-  Projection of theta/eps onto P(w) with w = (1,...,1,0,...,0) (k ones): the
-  vertices of that permutahedron are exactly the 0/1 indicators of
-  k-subsets, so the projection is the canonical soft top-k selector built
-  from the paper's machinery (cf. §6.1's O(n log k) remark).
+  Projection of theta/eps onto P(w) with w = (1,...,1,0,...,0) (k ones):
+  the vertices of that permutahedron are exactly the 0/1 indicators of
+  k-subsets, so the projection is the canonical soft top-k selector
+  built from the paper's machinery (cf. §6.1's O(n log k) remark).
+
+  Parameters
+  ----------
+  values : Array, shape (..., n)
+      Selection scores (last axis).
+  k : int
+      Number of entries softly selected, 1 <= k <= n.
+  regularization_strength : float
+      eps > 0; small eps approaches the hard 0/1 top-k mask.
+  regularization : {"l2", "kl"}
+      Psi for the projection.
+  impl : {"auto", "lax", "pallas", "minimax"} or None
+      Isotonic backend (``repro.kernels.dispatch``).
+
+  Returns
+  -------
+  Array, shape (..., n)
+      Mask in [0, 1]^n with sum k (exactly, by the projection's
+      marginals); gradients flow to every entry, unlike hard top-k.
+
+  Notes
+  -----
+  O(n log n) per row via the generic reduction (a specialized
+  O(n log k) variant is possible, §6.1, but the generic path is what
+  the MoE router benchmarks exercise — see
+  ``repro.kernels.ops.soft_topk_gates`` for the fused kernel).
   """
   values = jnp.asarray(values)
   eps = regularization_strength
@@ -117,7 +213,32 @@ def soft_quantile(
     regularization: str = "l2",
     impl: str | None = None,
 ) -> Array:
-  """Differentiable q-quantile via the soft sort (ascending)."""
+  """Differentiable q-quantile via the soft sort (ascending).
+
+  Parameters
+  ----------
+  values : Array, shape (..., n)
+      Samples (last axis).
+  q : float
+      Quantile in [0, 1]; the index round(q * (n-1)) of the ascending
+      soft sort is returned (q=0.5 is a soft median).
+  regularization_strength : float
+      eps > 0 for the underlying soft sort (Eq. 5).
+  regularization : {"l2", "kl"}
+      Psi for the projection.
+  impl : {"auto", "lax", "pallas", "minimax"} or None
+      Isotonic backend (``repro.kernels.dispatch``).
+
+  Returns
+  -------
+  Array, shape (...)
+      The soft q-quantile per batch row (one scalar per row).
+
+  Notes
+  -----
+  O(n log n) per row — inherited from ``soft_sort``; gradients spread
+  over neighboring order statistics instead of the single hard sample.
+  """
   values = jnp.asarray(values)
   n = values.shape[-1]
   s = soft_sort(values, regularization_strength, regularization,
@@ -135,8 +256,23 @@ def soft_quantile(
 def eps_min(s: Array, w: Array) -> Array:
   """Largest eps at which P_Psi(z/eps, w) equals the hard operator.
 
-  `s` must be sorted descending (s = z_sigma(z)); `w` sorted descending.
-  For eps <= eps_min the soft operator is exactly hard (Lemma 3).
+  Parameters
+  ----------
+  s : Array, shape (..., n)
+      Sorted-descending inputs, s = z_sigma(z).
+  w : Array, shape (..., n)
+      Sorted-descending target weights.
+
+  Returns
+  -------
+  Array, shape (...)
+      eps_min = min_i (s_i - s_{i+1}) / (w_i - w_{i+1}); for
+      eps <= eps_min the soft operator is *exactly* the hard one
+      (paper Lemma 3) — used by tests to validate asymptotics exactly.
+
+  Notes
+  -----
+  O(n) per row (one pass over adjacent differences).
   """
   ds = s[..., :-1] - s[..., 1:]
   dw = w[..., :-1] - w[..., 1:]
@@ -144,7 +280,27 @@ def eps_min(s: Array, w: Array) -> Array:
 
 
 def eps_max(s: Array, w: Array) -> Array:
-  """Smallest eps beyond which the solution is the closed-form constant."""
+  """Smallest eps beyond which the solution is the closed-form constant.
+
+  Parameters
+  ----------
+  s : Array, shape (..., n)
+      Sorted-descending inputs.
+  w : Array, shape (..., n)
+      Sorted-descending target weights.
+
+  Returns
+  -------
+  Array, shape (...)
+      eps_max = max_{i<j} (s_i - s_j) / (w_i - w_j) (paper Lemma 3's
+      other endpoint): beyond it every PAV block has merged and the
+      projection is the fully-pooled closed form.
+
+  Notes
+  -----
+  O(n^2) per row (all pairs) — a diagnostic for tests/analysis, not a
+  production path.
+  """
   n = s.shape[-1]
   i, j = jnp.triu_indices(n, k=1)
   num = s[..., i] - s[..., j]

@@ -25,6 +25,14 @@ Backends
 Selection precedence: explicit ``backend=`` argument > ``REPRO_BACKEND``
 environment variable > ``set_default_backend`` / ``use_backend`` (process
 default, initially ``"auto"``).
+
+Observability: every resolution and every dispatched call is recorded into
+``repro.obs.metrics`` (counters keyed by ``(op, regularization, backend)``,
+shape buckets, auto-routing decisions, and trace-cache hit/miss counts),
+and every backend forward runs under a ``jax.named_scope`` so kernels are
+attributable in jaxprs / HLO metadata / ``jax.profiler`` traces.  All of
+this happens at Python trace time only, and is a no-op when metrics are
+disabled (``REPRO_METRICS=0``).
 """
 
 from __future__ import annotations
@@ -35,6 +43,9 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+
+from repro.obs import metrics as _metrics
+from repro.obs import tracing as _tracing
 
 Array = jax.Array
 
@@ -95,6 +106,22 @@ def use_backend(backend: str):
     _DEFAULT["value"] = prev
 
 
+def _env_backend() -> str | None:
+  """Validated ``REPRO_BACKEND`` value, or None when unset/empty.
+
+  Validated at read time: an unknown value would otherwise surface much
+  later as a confusing registry KeyError deep inside a traced call.
+  """
+  raw = os.environ.get(ENV_VAR)
+  if not raw:
+    return None
+  if raw not in BACKENDS:
+    raise ValueError(
+        f"{ENV_VAR}={raw!r} is not a known backend; "
+        f"expected one of {BACKENDS}")
+  return raw
+
+
 def resolve_backend(
     op: str,
     regularization: str,
@@ -109,24 +136,50 @@ def resolve_backend(
   inputs always pick the same implementation, so a jit cache entry never
   flips backends between traces.
   """
-  b = backend or os.environ.get(ENV_VAR) or _DEFAULT["value"]
+  if backend:
+    b, source = backend, "arg"
+  else:
+    env = _env_backend()
+    if env:
+      b, source = env, "env"
+    else:
+      b, source = _DEFAULT["value"], "default"
   if b != "auto":
     if (op, regularization, b) not in _REGISTRY:
       raise ValueError(
           f"no backend {b!r} registered for op={op!r}, "
           f"regularization={regularization!r}; have "
           f"{registered_backends(op, regularization)}")
+    _metrics.counter_inc("dispatch_resolve", op=op,
+                         regularization=regularization, backend=b,
+                         source=source)
     return b
   platform = platform or jax.default_backend()
-  if platform == "tpu":
-    return "pallas"
   n = shape[-1] if shape else 0
   rows = 1
   for d in (shape[:-1] if shape else ()):
     rows *= d
-  if n <= AUTO_MINIMAX_MAX_N and rows * n * n <= AUTO_MINIMAX_MAX_ELEMS:
-    return "minimax"
-  return "lax"
+  if platform == "tpu":
+    b, why = "pallas", "tpu"
+  elif n <= AUTO_MINIMAX_MAX_N and rows * n * n <= AUTO_MINIMAX_MAX_ELEMS:
+    b, why = "minimax", "small_n"
+  else:
+    b, why = "lax", "large_or_batched"
+  _metrics.counter_inc("dispatch_resolve", op=op,
+                       regularization=regularization, backend=b,
+                       source="auto")
+  _metrics.counter_inc("dispatch_auto_route", platform=platform,
+                       backend=b, reason=why)
+  return b
+
+
+# Trace-key cache: (op, reg, backend, flat shape, dtype) tuples already seen
+# by ``dispatch``.  A repeated key means jit served the call from its
+# compile cache (or re-traced an identical signature); a new key is a fresh
+# trace/compile.  Only mutated while metrics are enabled, and cleared with
+# the registry, so disabled mode retains no state.
+_SEEN_TRACE_KEYS: set[tuple] = set()
+_metrics.on_reset(_SEEN_TRACE_KEYS.clear)
 
 
 def dispatch(op: str, regularization: str, backend: str | None,
@@ -137,13 +190,32 @@ def dispatch(op: str, regularization: str, backend: str | None,
   dimension; leading batch axes are flattened to a single row axis before
   the backend call and restored afterwards, so backends only ever see
   (rows, n).
+
+  The backend call runs under ``jax.named_scope`` (see
+  ``repro.obs.tracing.scope_name``) so its primitives are attributable in
+  profiler traces, and — when metrics are enabled — records per-backend
+  call counts, flattened shape buckets, and trace-cache hit/miss counters.
   """
   shape = args[0].shape
   b = resolve_backend(op, regularization, backend, shape=shape)
   fn = _REGISTRY[(op, regularization, b)]
   n = shape[-1]
   flat = [a.reshape(-1, n) for a in args]
-  return fn(*flat).reshape(shape)
+  if _metrics.enabled():
+    rows = flat[0].shape[0] if n else 0
+    _metrics.counter_inc("dispatch_calls", op=op,
+                         regularization=regularization, backend=b)
+    _metrics.counter_inc("dispatch_shape", op=op,
+                         bucket=_metrics.shape_bucket(rows, n))
+    key = (op, regularization, b, flat[0].shape,
+           str(jnp.result_type(args[0])))
+    if key in _SEEN_TRACE_KEYS:
+      _metrics.counter_inc("dispatch_trace_cache_hit")
+    else:
+      _SEEN_TRACE_KEYS.add(key)
+      _metrics.counter_inc("dispatch_trace_cache_miss")
+  with _tracing.backend_scope(op, regularization, b):
+    return fn(*flat).reshape(shape)
 
 
 # ---------------------------------------------------------------------------

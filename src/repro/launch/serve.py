@@ -24,6 +24,8 @@ from repro.data.pipeline import pipeline_for_arch
 from repro.launch import steps as ST
 from repro.launch.dryrun import parse_overrides
 from repro.models import transformer as T
+from repro.obs import artifacts as obs_artifacts
+from repro.obs.tracing import trace_annotation
 
 
 def greedy(logits):
@@ -39,6 +41,9 @@ def main():
   ap.add_argument("--batch", type=int, default=4)
   ap.add_argument("--prompt-len", type=int, default=32)
   ap.add_argument("--gen", type=int, default=16)
+  ap.add_argument("--bench-json", default=None, metavar="PATH",
+                  help="write a schema-v1 BENCH artifact (prefill/decode "
+                       "walls + dispatch metrics) on exit")
   ap.add_argument("--set", action="append", dest="overrides")
   args = ap.parse_args()
 
@@ -64,8 +69,9 @@ def main():
   decode = jax.jit(ST.make_decode_step(cfg))
 
   t0 = time.time()
-  logits, caches = prefill(params, batch)
-  jax.block_until_ready(logits)
+  with trace_annotation("repro_serve_prefill"):
+    logits, caches = prefill(params, batch)
+    jax.block_until_ready(logits)
   t_prefill = time.time() - t0
 
   pos0 = args.prompt_len + (cfg.num_patches if cfg.frontend == "vision"
@@ -73,11 +79,12 @@ def main():
   tok = greedy(logits)
   out_tokens = [np.asarray(tok)]
   t0 = time.time()
-  for i in range(args.gen - 1):
-    logits, caches = decode(params, caches, tok, jnp.int32(pos0 + i))
-    tok = greedy(logits)
-    out_tokens.append(np.asarray(tok))
-  jax.block_until_ready(logits)
+  with trace_annotation("repro_serve_decode"):
+    for i in range(args.gen - 1):
+      logits, caches = decode(params, caches, tok, jnp.int32(pos0 + i))
+      tok = greedy(logits)
+      out_tokens.append(np.asarray(tok))
+    jax.block_until_ready(logits)
   t_decode = time.time() - t0
 
   gen = np.stack(out_tokens, axis=1)
@@ -88,6 +95,22 @@ def main():
   print("[serve] sample generations (first 2 rows):")
   for row in gen[:2]:
     print("  ", row.reshape(row.shape[0], -1)[:, 0].tolist())
+
+  if args.bench_json:
+    decode_steps = max(args.gen - 1, 1)
+    results = [
+        {"name": "serve/prefill", "wall_us": t_prefill * 1e6,
+         "batch": args.batch, "prompt_len": args.prompt_len},
+        {"name": "serve/decode_step",
+         "wall_us": t_decode / decode_steps * 1e6,
+         "batch": args.batch, "decode_steps": decode_steps,
+         "tok_per_s": decode_steps * args.batch / max(t_decode, 1e-9)},
+    ]
+    obs_artifacts.write_bench_artifact(
+        args.bench_json, results,
+        obs_artifacts.collect_meta(
+            suite="serve", arch=args.arch, smoke=bool(args.smoke),
+            batch=args.batch, prompt_len=args.prompt_len, gen=args.gen))
 
 
 if __name__ == "__main__":

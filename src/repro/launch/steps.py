@@ -22,13 +22,15 @@ Array = jax.Array
 
 
 def loss_from_batch(cfg, params, batch) -> tuple[Array, dict[str, Array]]:
-  token_losses, aux = T.forward_train(cfg, params, batch)
+  with jax.named_scope("repro_forward_train"):
+    token_losses, aux = T.forward_train(cfg, params, batch)
   if cfg.loss_trim_fraction > 0:
     # Paper §6.4 at LM scale: soft least-trimmed-squares over per-token
     # losses, applied per sequence (bounded PAV length; DESIGN.md §4).
-    loss = jnp.mean(soft_trimmed_token_loss(
-        token_losses.reshape(token_losses.shape[0], -1),
-        cfg.loss_trim_fraction, cfg.loss_trim_eps))
+    with jax.named_scope("repro_soft_lts_loss"):
+      loss = jnp.mean(soft_trimmed_token_loss(
+          token_losses.reshape(token_losses.shape[0], -1),
+          cfg.loss_trim_fraction, cfg.loss_trim_eps))
   else:
     loss = jnp.mean(token_losses)
   total = loss + 0.01 * aux
@@ -82,8 +84,9 @@ def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, *,
 
     lr_scale = (lr_schedule(opt_state["adam"]["step"])
                 if lr_schedule else 1.0)
-    new_params, new_adam, opt_metrics = adamw.update(
-        opt_cfg, grads, opt_state["adam"], params, lr_scale)
+    with jax.named_scope("repro_optimizer_update"):
+      new_params, new_adam, opt_metrics = adamw.update(
+          opt_cfg, grads, opt_state["adam"], params, lr_scale)
     new_opt = {"adam": new_adam}
     if compress_grads:
       new_opt["ef_residual"] = new_resid

@@ -41,6 +41,9 @@ from repro.data.pipeline import pipeline_for_arch
 from repro.launch import steps as ST
 from repro.launch.dryrun import parse_overrides
 from repro.models import transformer as T
+from repro.obs import artifacts as obs_artifacts
+from repro.obs import metrics as obs_metrics
+from repro.obs.tracing import trace_annotation
 from repro.optim import adamw
 from repro.optim.schedule import cosine_with_warmup
 
@@ -122,10 +125,12 @@ class Trainer:
                for k, v in self.pipeline.batch_at(step).items()
                if k != "corrupt_mask"}
       t0 = time.time()
-      state.params, state.opt_state, metrics = self.train_step(
-          state.params, state.opt_state, batch)
-      jax.block_until_ready(metrics["loss"])
+      with trace_annotation("repro_train_step"):
+        state.params, state.opt_state, metrics = self.train_step(
+            state.params, state.opt_state, batch)
+        jax.block_until_ready(metrics["loss"])
       dt = time.time() - t0
+      obs_metrics.observe("train_step_us", dt * 1e6)
       self.maybe_flag_straggler(dt)
       state.step = step + 1
       if step % 10 == 0 or step == state.step - 1:
@@ -143,6 +148,22 @@ class Trainer:
                 {"step": state.step})
     return state, metrics
 
+  def bench_results(self, final_metrics) -> list[dict]:
+    """Structured run summary for the schema-v1 bench artifact."""
+    times = sorted(self._step_times)
+    if not times:
+      return []
+    median = times[len(times) // 2]
+    return [{
+        "name": "train/step",
+        "median_step_us": median * 1e6,
+        "p90_step_us": times[min(len(times) - 1,
+                                 int(len(times) * 0.9))] * 1e6,
+        "steps_timed": len(times),
+        "straggler_events": self.straggler_events,
+        "final_loss": float(final_metrics.get("loss", float("nan"))),
+    }]
+
 
 def main():
   ap = argparse.ArgumentParser()
@@ -159,6 +180,9 @@ def main():
   ap.add_argument("--compress-grads", action="store_true")
   ap.add_argument("--ckpt-dir", default=None)
   ap.add_argument("--ckpt-every", type=int, default=50)
+  ap.add_argument("--bench-json", default=None, metavar="PATH",
+                  help="write a schema-v1 BENCH artifact (step-time "
+                       "distribution + dispatch metrics) on exit")
   ap.add_argument("--set", action="append", dest="overrides")
   args = ap.parse_args()
 
@@ -186,6 +210,12 @@ def main():
   print(f"[train] done at step {state.step}; "
         f"final loss {float(metrics.get('loss', float('nan'))):.4f}; "
         f"stragglers {trainer.straggler_events}")
+  if args.bench_json:
+    obs_artifacts.write_bench_artifact(
+        args.bench_json, trainer.bench_results(metrics),
+        obs_artifacts.collect_meta(
+            suite="train", arch=args.arch, smoke=bool(args.smoke),
+            batch=args.batch, seq=args.seq, steps=state.step))
 
 
 if __name__ == "__main__":

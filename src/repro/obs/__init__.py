@@ -1,0 +1,79 @@
+"""Observability for the dispatch layer: metrics, tracing, timing, artifacts.
+
+This package is the single place the repo records *what actually ran*:
+which backend served each ``(op, regularization)`` dispatch, at what shapes,
+how often jit re-traced, and how long benchmarked calls took.  It exists
+because the paper's headline claim is performance (O(n log n) soft
+sorting/ranking, "an order of magnitude faster" — Blondel et al., 2020) and
+an unverifiable claim is not a reproduction.
+
+Modules
+-------
+``repro.obs.metrics``
+    Process-local counters and histograms, keyed by name + labels.  Gated
+    by ``REPRO_METRICS`` (any value but ``0``/``false``/``off`` enables;
+    default enabled).  When disabled every recording call is a constant-time
+    no-op and no state is retained.
+``repro.obs.tracing``
+    ``jax.named_scope`` wrappers so dispatched backend kernels are
+    attributable in jaxprs, HLO and ``jax.profiler`` traces, plus host-side
+    profiler annotations for eager timing regions.
+``repro.obs.timing``
+    Wall-clock timing helpers (``block_until_ready`` walls, median
+    us/call) shared by the benchmark harness and the launch drivers.
+``repro.obs.artifacts``
+    The one structured-JSON ``BENCH_*.json`` emitter + schema validator
+    used by ``benchmarks/run.py``, ``repro.launch.train`` and
+    ``repro.launch.serve`` (schema ``repro.bench/v1``; see
+    docs/BENCHMARKS.md).  ``python -m repro.obs.artifacts FILE...``
+    validates artifacts and is what CI gates the bench smoke on.
+
+Layering: ``repro.obs`` imports only jax/stdlib — never ``repro.core`` or
+``repro.kernels`` — so the dispatch layer can depend on it without cycles.
+"""
+
+from repro.obs import artifacts, metrics, timing, tracing
+from repro.obs.artifacts import (
+    SCHEMA_VERSION,
+    bench_payload,
+    collect_meta,
+    validate_bench_payload,
+    write_bench_artifact,
+)
+from repro.obs.metrics import (
+    counter_inc,
+    counters,
+    enabled,
+    histograms,
+    observe,
+    reset,
+    set_enabled,
+    snapshot,
+)
+from repro.obs.timing import time_fn, timed
+from repro.obs.tracing import backend_scope, scope_name, trace_annotation
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "artifacts",
+    "backend_scope",
+    "bench_payload",
+    "collect_meta",
+    "counter_inc",
+    "counters",
+    "enabled",
+    "histograms",
+    "metrics",
+    "observe",
+    "reset",
+    "scope_name",
+    "set_enabled",
+    "snapshot",
+    "time_fn",
+    "timed",
+    "timing",
+    "trace_annotation",
+    "tracing",
+    "validate_bench_payload",
+    "write_bench_artifact",
+]

@@ -1,0 +1,5 @@
+"""CLI: validate BENCH artifacts — ``python -m repro.obs BENCH_*.json``."""
+
+from repro.obs.artifacts import main
+
+raise SystemExit(main())

@@ -1,0 +1,167 @@
+"""Process-local metrics registry: counters + histograms with labels.
+
+Design constraints (see ISSUE 6 / docs/BENCHMARKS.md):
+
+* **Near-zero overhead when disabled.**  ``REPRO_METRICS=0`` (or ``false`` /
+  ``off``) turns every recording call into a single predicate check and
+  retains *no* state — not even auxiliary caches like the dispatch layer's
+  seen-trace-key set (those register reset/disable hooks here).  Note the
+  recording calls only ever run at Python trace time anyway; nothing in this
+  module executes inside a jitted computation.
+* **Deterministic flattening.**  A metric instance is identified by
+  ``name{k=v,...}`` with label keys sorted, so snapshots are stable across
+  runs and safely diffable in CI artifacts.
+* **No dependencies.**  Stdlib only; importable from the dispatch layer
+  without cycles.
+
+The registry is process-global and thread-safe enough for the CPython uses
+here (dict ops under the GIL); it is *not* a distributed metrics system —
+artifacts snapshot it into ``BENCH_*.json`` instead.
+"""
+
+from __future__ import annotations
+
+import math
+import os
+import threading
+from typing import Callable
+
+ENV_VAR = "REPRO_METRICS"
+
+_FALSY = ("0", "false", "off", "no")
+
+_lock = threading.Lock()
+_counters: dict[str, int] = {}
+_histograms: dict[str, dict] = {}
+# None -> consult the environment on next call; True/False -> forced.
+_enabled_override: bool | None = None
+# Hooks run on reset() and on set_enabled(False): auxiliary state held by
+# other modules (e.g. dispatch's trace-key cache) must also be dropped so
+# "disabled mode records no state" holds globally.
+_reset_hooks: list[Callable[[], None]] = []
+
+
+def enabled() -> bool:
+  """True if metrics recording is on (default; ``REPRO_METRICS=0`` opts out)."""
+  if _enabled_override is not None:
+    return _enabled_override
+  return os.environ.get(ENV_VAR, "1").strip().lower() not in _FALSY
+
+
+def set_enabled(on: bool | None) -> None:
+  """Force metrics on/off programmatically; ``None`` defers to the env var.
+
+  Turning metrics off also drops auxiliary state registered via
+  ``on_reset`` so a disabled process holds no recorded state at all.
+  """
+  global _enabled_override
+  _enabled_override = on
+  if on is False:
+    reset()
+
+
+def on_reset(hook: Callable[[], None]) -> None:
+  """Register a callback invoked by ``reset()`` (aux-state invalidation)."""
+  _reset_hooks.append(hook)
+
+
+def reset() -> None:
+  """Clear every counter/histogram and all registered auxiliary state."""
+  with _lock:
+    _counters.clear()
+    _histograms.clear()
+  for hook in _reset_hooks:
+    hook()
+
+
+def _key(name: str, labels: dict) -> str:
+  if not labels:
+    return name
+  inner = ",".join(f"{k}={labels[k]}" for k in sorted(labels))
+  return f"{name}{{{inner}}}"
+
+
+def counter_inc(name: str, value: int = 1, /, **labels) -> None:
+  """Increment counter ``name{labels}`` by ``value`` (no-op when disabled)."""
+  if not enabled():
+    return
+  k = _key(name, labels)
+  with _lock:
+    _counters[k] = _counters.get(k, 0) + value
+
+
+def counter_value(name: str, /, **labels) -> int:
+  """Current value of a counter (0 if never incremented)."""
+  return _counters.get(_key(name, labels), 0)
+
+
+def observe(name: str, value: float, /, **labels) -> None:
+  """Record ``value`` into histogram ``name{labels}`` (no-op when disabled).
+
+  Histograms keep count/sum/min/max plus power-of-two bucket counts
+  (bucket ``b`` counts values ``<= 2**b``), which is enough resolution for
+  us/call timing trajectories without unbounded storage.
+  """
+  if not enabled():
+    return
+  k = _key(name, labels)
+  with _lock:
+    h = _histograms.get(k)
+    if h is None:
+      h = {"count": 0, "sum": 0.0, "min": math.inf, "max": -math.inf,
+           "buckets": {}}
+      _histograms[k] = h
+    h["count"] += 1
+    h["sum"] += float(value)
+    h["min"] = min(h["min"], float(value))
+    h["max"] = max(h["max"], float(value))
+    b = pow2_bucket(value)
+    h["buckets"][b] = h["buckets"].get(b, 0) + 1
+
+
+def pow2_bucket(value: float) -> str:
+  """Histogram bucket label: smallest power of two >= value (``<=2^k``)."""
+  v = max(float(value), 0.0)
+  if v <= 1.0:
+    return "<=2^0"
+  return f"<=2^{math.ceil(math.log2(v))}"
+
+
+def shape_bucket(rows: int, n: int) -> str:
+  """Stable low-cardinality label for a flattened (rows, n) problem shape.
+
+  No commas (commas separate labels in flattened keys): e.g. ``r2^3_n2^7``
+  for a batch of <=8 rows at n <= 128.
+  """
+  return f"r{pow2_bucket(rows)[2:]}_n{pow2_bucket(n)[2:]}"
+
+
+def counters(prefix: str = "") -> dict[str, int]:
+  """Flattened ``name{labels}`` -> value view (optionally prefix-filtered)."""
+  with _lock:
+    return {k: v for k, v in sorted(_counters.items())
+            if k.startswith(prefix)}
+
+
+def histograms(prefix: str = "") -> dict[str, dict]:
+  """Flattened histogram view; ``sum``/``min``/``max`` are JSON-safe floats."""
+  out = {}
+  with _lock:
+    for k in sorted(_histograms):
+      if not k.startswith(prefix):
+        continue
+      h = _histograms[k]
+      out[k] = {
+          "count": h["count"],
+          "sum": h["sum"],
+          "min": h["min"] if h["count"] else None,
+          "max": h["max"] if h["count"] else None,
+          "buckets": dict(sorted(h["buckets"].items())),
+      }
+  return out
+
+
+def snapshot() -> dict:
+  """JSON-serializable snapshot of the whole registry (for artifacts)."""
+  return {"enabled": enabled(), "counters": counters(),
+          "histograms": histograms()}

@@ -1,0 +1,49 @@
+"""Attribution scopes: name-stack + profiler annotations for dispatch.
+
+Two complementary mechanisms, used together by
+``repro.kernels.dispatch.dispatch``:
+
+* ``backend_scope`` — a ``jax.named_scope`` pushed around the backend
+  forward call at *trace* time.  The scope name lands on every primitive
+  the backend emits, so jaxprs, lowered StableHLO and compiled-HLO
+  ``op_name`` metadata (and therefore ``jax.profiler`` / XLA trace viewers)
+  all attribute kernel time to ``repro_<op>_<reg>_<backend>`` instead of an
+  anonymous soup of ``while``/``scatter`` ops.
+* ``trace_annotation`` — a host-side ``jax.profiler.TraceAnnotation``
+  (no-op fallback if the profiler API is unavailable) for *eager* wall
+  regions: benchmark timing loops, train-step walls, serve prefill/decode.
+
+Scope names are ``[a-z0-9_]`` only: every consumer (HLO metadata, TensorBoard
+trace viewer, pprof) treats ``/`` and ``=`` as structure.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import re
+
+import jax
+
+_SANITIZE = re.compile(r"[^a-z0-9_]+")
+
+
+def _clean(part: str) -> str:
+  return _SANITIZE.sub("_", str(part).lower()).strip("_") or "unknown"
+
+
+def scope_name(op: str, regularization: str, backend: str) -> str:
+  """Canonical name-stack entry for a dispatched backend call."""
+  return f"repro_{_clean(op)}_{_clean(regularization)}_{_clean(backend)}"
+
+
+def backend_scope(op: str, regularization: str, backend: str):
+  """``jax.named_scope`` labeling every primitive a backend emits."""
+  return jax.named_scope(scope_name(op, regularization, backend))
+
+
+def trace_annotation(name: str):
+  """Host-side profiler annotation (eager regions); nullcontext fallback."""
+  annotation = getattr(jax.profiler, "TraceAnnotation", None)
+  if annotation is None:  # very old jax; keep the API total
+    return contextlib.nullcontext()
+  return annotation(name)

@@ -1,0 +1,111 @@
+#!/usr/bin/env python3
+"""Docs gate: lightweight markdown lint + referenced-path existence check.
+
+  python tools/check_docs.py [files...]     # default: README.md docs/*.md
+
+Checks (zero third-party dependencies, so CI needs no extra installs):
+
+1. **Markdown sanity** — balanced ``` code fences, LF line endings,
+   trailing final newline, ATX headings followed by a space.
+2. **Relative links resolve** — every ``[text](path)`` target that is not
+   a URL or a pure anchor must exist relative to the referencing file.
+3. **Code paths exist** — every repo-path-looking token
+   (``src/...``, ``tests/...``, ``benchmarks/...``, ``docs/...``,
+   ``examples/...``, ``tools/...``, ``.github/...``) mentioned anywhere
+   in the docs must exist on disk, so the documentation can never name a
+   module that a refactor deleted. Glob-y tokens (``BENCH_*.json``) are
+   skipped.
+
+Exit status 0 = clean; 1 = problems (each printed as ``file:line: msg``).
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Repo-path-looking tokens: a known top-level directory followed by a
+# plausible relative path with a file extension.
+_PATH_RE = re.compile(
+    r"(?<![\w/.])((?:src|tests|benchmarks|docs|examples|tools|\.github)"
+    r"/[\w\-./]+\.[A-Za-z]{1,5})")
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+_FENCE_RE = re.compile(r"^(`{3,})")
+
+
+def default_files() -> list[str]:
+  files = [os.path.join(REPO_ROOT, "README.md")]
+  files += sorted(glob.glob(os.path.join(REPO_ROOT, "docs", "**", "*.md"),
+                            recursive=True))
+  return [f for f in files if os.path.exists(f)]
+
+
+def check_file(path: str) -> list[str]:
+  problems: list[str] = []
+  rel = os.path.relpath(path, REPO_ROOT)
+  with open(path, "rb") as f:
+    raw = f.read()
+  if b"\r" in raw:
+    problems.append(f"{rel}:1: CRLF line endings (use LF)")
+  if raw and not raw.endswith(b"\n"):
+    problems.append(f"{rel}:1: missing trailing newline")
+  text = raw.decode("utf-8", errors="replace")
+  lines = text.splitlines()
+
+  in_fence = False
+  fence_open_line = 0
+  for i, line in enumerate(lines, 1):
+    if _FENCE_RE.match(line.strip()):
+      in_fence = not in_fence
+      if in_fence:
+        fence_open_line = i
+      continue
+    if in_fence:
+      continue
+    if line.startswith("#") and not re.match(r"^#{1,6} \S", line):
+      problems.append(f"{rel}:{i}: malformed ATX heading: {line[:40]!r}")
+    # Relative links must resolve (from the referencing file's directory).
+    for m in _LINK_RE.finditer(line):
+      target = m.group(1)
+      if target.startswith(("http://", "https://", "mailto:", "#")):
+        continue
+      target = target.split("#")[0]
+      if not target or "*" in target:
+        continue
+      resolved = os.path.normpath(os.path.join(os.path.dirname(path), target))
+      if not os.path.exists(resolved):
+        problems.append(f"{rel}:{i}: broken link target {target!r}")
+    # Repo paths named in prose/tables/code spans must exist.
+    for m in _PATH_RE.finditer(line):
+      token = m.group(1).rstrip(".")
+      if "*" in token:
+        continue
+      if not os.path.exists(os.path.join(REPO_ROOT, token)):
+        problems.append(f"{rel}:{i}: references nonexistent path {token!r}")
+  if in_fence:
+    problems.append(f"{rel}:{fence_open_line}: unclosed code fence")
+  return problems
+
+
+def main(argv: list[str]) -> int:
+  files = [os.path.abspath(a) for a in argv] if argv else default_files()
+  if not files:
+    print("check_docs: no markdown files found", file=sys.stderr)
+    return 1
+  problems: list[str] = []
+  for path in files:
+    problems += check_file(path)
+  for p in problems:
+    print(p, file=sys.stderr)
+  print(f"check_docs: {len(files)} files, {len(problems)} problems")
+  return 1 if problems else 0
+
+
+if __name__ == "__main__":
+  raise SystemExit(main(sys.argv[1:]))
