@@ -8,11 +8,16 @@ reproduced: our operators' runtime is nearly flat in n while baselines grow
 quadratically and exhaust memory first.
 
 Part 2 (``run_backend_sweep``) sweeps the dispatch-layer backends
-("lax" | "pallas" | "minimax") over n x batch and writes the
+("lax" | "scan" | "pallas" | "minimax") over n x batch and writes the
 ``BENCH_runtime.json`` artifact that CI archives.  Combinations that are
 infeasible for a backend on the current platform (minimax's O(batch * n^2)
 memory, the Pallas interpreter off-TPU) are recorded as skipped rather than
 silently dropped.
+
+Part 3 (``run_depth_curve``) isolates the paper's complexity claim on
+hardware: the sequential O(n)-depth stack machine ("lax") against the
+O(log n)-depth divide-and-conquer machine ("scan") on the bare isotonic
+solve across a geometric n sweep -> ``BENCH_depth_curve.json``.
 """
 
 from __future__ import annotations
@@ -26,6 +31,7 @@ import numpy as np
 from benchmarks.common import emit, time_fn
 from repro.core import soft_rank
 from repro.core.baselines import allpairs_rank, ot_rank
+from repro.core.isotonic import isotonic_kl, isotonic_l2
 from repro.kernels import dispatch as dispatch_mod
 from repro.obs import artifacts as obs_artifacts
 
@@ -74,9 +80,11 @@ def run():
 # Backend sweep -> BENCH_runtime.json
 # ---------------------------------------------------------------------------
 
-SWEEP_NS = (100, 1000, 10000)
+# 1024 is in both tiers on purpose: the scan-vs-lax >=2x acceptance bar is
+# stated at n >= 1024, so even smoke artifacts carry the evidence cell.
+SWEEP_NS = (100, 1024, 10000)
 SWEEP_BATCHES = (1, 32, 256)
-SMOKE_NS = (64, 200)
+SMOKE_NS = (64, 1024)
 SMOKE_BATCHES = (1, 8)
 
 # Feasibility caps keep the sweep bounded off-TPU; every skip is recorded.
@@ -131,8 +139,22 @@ def run_backend_sweep(smoke: bool = False,
           bwd = jax.jit(jax.grad(lambda t, f=fwd: jnp.sum(f(t) ** 2)))
           rec["fwd_bwd_us"] = time_fn(bwd, theta, warmup=1, iters=iters,
                                       name=name + "/bwd")
+          # Bare solver column: soft_rank shares an O(n log n) sort +
+          # unpermute across all backends, which dilutes the backend
+          # difference at large batch — iso_fwd_us isolates what the
+          # backends actually differ on.
+          if reg == "l2":
+            iso = jax.jit(functools.partial(isotonic_l2, impl=backend))
+            iso_args = (theta,)
+          else:
+            iso = jax.jit(functools.partial(isotonic_kl, impl=backend))
+            iso_args = (theta, jnp.zeros_like(theta))
+          rec["iso_fwd_us"] = time_fn(iso, *iso_args, warmup=1, iters=iters,
+                                      name=name + "/iso")
           results.append(rec)
-          emit(name, rec["fwd_us"], f"fwd; bwd={rec['fwd_bwd_us']:.1f}us",
+          emit(name, rec["fwd_us"],
+               f"fwd; bwd={rec['fwd_bwd_us']:.1f}us; "
+               f"iso={rec['iso_fwd_us']:.1f}us",
                collect=False)
 
   meta = obs_artifacts.collect_meta(
@@ -146,6 +168,84 @@ def run_backend_sweep(smoke: bool = False,
   return obs_artifacts.write_bench_artifact(out_path, results, meta)
 
 
+# ---------------------------------------------------------------------------
+# Depth-vs-n curve -> BENCH_depth_curve.json
+# ---------------------------------------------------------------------------
+
+DEPTH_NS = (64, 256, 1024, 4096, 16384)
+DEPTH_SMOKE_NS = (64, 1024)
+DEPTH_BATCH = 8
+_DEPTH_LAX_MAX_N = 16384         # O(n)-depth machine: past this the curve's
+                                 # shape is already unambiguous on CPU
+
+
+def run_depth_curve(smoke: bool = False,
+                    out_path: str = "BENCH_depth_curve.json") -> dict:
+  """Time the bare isotonic solve (fwd and fwd+bwd) for the O(n)-depth
+  "lax" machine vs the O(log n)-depth "scan" machine across a geometric n
+  sweep, and record the scan/lax speedup per cell.  This is the hardware
+  realization of the paper's O(n log n) claim: same exact solution, the
+  sequential-depth difference is the whole effect."""
+  platform = jax.default_backend()
+  ns = DEPTH_SMOKE_NS if smoke else DEPTH_NS
+  rng = np.random.default_rng(0)
+  iters = 2 if smoke else 3
+
+  results = []
+  for n in ns:
+    theta = jnp.array(rng.normal(size=(DEPTH_BATCH, n)).astype(np.float32))
+    w = jnp.zeros((DEPTH_BATCH, n), np.float32)
+    cell: dict[tuple[str, str], dict] = {}
+    for backend in ("lax", "scan"):
+      for reg in ("l2", "kl"):
+        name = f"depth_curve/{reg}/{backend}/n={n}"
+        rec = {"name": name, "op": "isotonic", "regularization": reg,
+               "backend": backend, "n": n, "batch": DEPTH_BATCH}
+        if backend == "lax" and n > _DEPTH_LAX_MAX_N:
+          rec["skipped"] = (
+              f"lax O(n)-depth machine beyond CPU budget at n={n}")
+          results.append(rec)
+          emit(name, float("nan"), f"skipped: {rec['skipped']}",
+               collect=False)
+          continue
+        if reg == "l2":
+          fwd = jax.jit(functools.partial(isotonic_l2, impl=backend))
+          args = (theta,)
+        else:
+          fwd = jax.jit(functools.partial(isotonic_kl, impl=backend))
+          args = (theta, w)
+        rec["fwd_us"] = time_fn(fwd, *args, warmup=1, iters=iters,
+                                name=name)
+        bwd = jax.jit(jax.grad(lambda *a, f=fwd: jnp.sum(f(*a) ** 2)))
+        rec["fwd_bwd_us"] = time_fn(bwd, *args, warmup=1, iters=iters,
+                                    name=name + "/bwd")
+        results.append(rec)
+        cell[(reg, backend)] = rec
+        emit(name, rec["fwd_us"], f"fwd; bwd={rec['fwd_bwd_us']:.1f}us",
+             collect=False)
+    for reg in ("l2", "kl"):
+      lax_rec = cell.get((reg, "lax"))
+      scan_rec = cell.get((reg, "scan"))
+      if lax_rec and scan_rec:
+        speedup = lax_rec["fwd_us"] / scan_rec["fwd_us"]
+        results.append({
+            "name": f"depth_curve/{reg}/speedup/n={n}",
+            "op": "isotonic", "regularization": reg,
+            "backend": "scan_vs_lax", "n": n, "batch": DEPTH_BATCH,
+            "lax_fwd_us": lax_rec["fwd_us"],
+            "scan_fwd_us": scan_rec["fwd_us"],
+            "speedup_x": round(speedup, 3),
+        })
+        emit(f"depth_curve/{reg}/speedup/n={n}", lax_rec["fwd_us"],
+             f"scan is {speedup:.2f}x vs lax", collect=False)
+
+  meta = obs_artifacts.collect_meta(
+      smoke=smoke, suite="depth_curve", platform_note=platform,
+      batch=DEPTH_BATCH)
+  return obs_artifacts.write_bench_artifact(out_path, results, meta)
+
+
 if __name__ == "__main__":
   run()
   run_backend_sweep()
+  run_depth_curve()

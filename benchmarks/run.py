@@ -10,6 +10,9 @@ these:
 * ``BENCH_runtime.json`` — the dispatch-backend sweep (fwd / fwd+bwd
   us/call per ``(regularization, backend, n, batch)`` cell), emitted by
   both the full run and ``--smoke``;
+* ``BENCH_depth_curve.json`` — the O(n)-depth ("lax") vs O(log n)-depth
+  ("scan") isotonic-solve curve across n with per-n speedups, emitted by
+  both the full run and ``--smoke``;
 * ``BENCH_figures.json`` — every other paper-figure/table benchmark row,
   emitted by the full run.
 
@@ -17,9 +20,10 @@ Both artifacts embed the ``repro.obs`` metrics snapshot (per-backend
 dispatch-resolution counters, shape buckets, trace-cache counts) taken at
 write time, plus provenance meta (git sha, platform, jax version).
 
-``--smoke`` runs only the backend sweep at reduced sizes: a fast signal
-that every registered backend still executes and emits a schema-valid
-artifact.
+``--smoke`` runs only the backend sweep and depth curve at reduced sizes
+(n=1024 included so the scan-vs-lax speedup evidence survives the cut): a
+fast signal that every registered backend still executes and emits
+schema-valid artifacts.
 """
 
 from __future__ import annotations
@@ -46,6 +50,7 @@ BENCHES = {
     "fig6_fig7_lts": bench_lts.run,           # Figures 6-7
     "router": bench_router.run,               # framework hot path
     "backend_sweep": bench_runtime.run_backend_sweep,  # BENCH_runtime.json
+    "depth_curve": bench_runtime.run_depth_curve,      # BENCH_depth_curve.json
 }
 
 
@@ -54,7 +59,8 @@ def main() -> None:
   ap.add_argument("--only", default=None,
                   help="comma-separated subset of " + ",".join(BENCHES))
   ap.add_argument("--smoke", action="store_true",
-                  help="tiny backend sweep only; still writes BENCH_*.json")
+                  help="tiny backend sweep + depth curve only; still writes "
+                       "BENCH_*.json")
   args = ap.parse_args()
 
   # Start each harness invocation from a clean registry so artifact metrics
@@ -64,6 +70,7 @@ def main() -> None:
   print("name,us_per_call,derived")
   if args.smoke:
     bench_runtime.run_backend_sweep(smoke=True)
+    bench_runtime.run_depth_curve(smoke=True)
     return
 
   names = args.only.split(",") if args.only else list(BENCHES)

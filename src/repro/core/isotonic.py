@@ -14,12 +14,19 @@ This module is batched-first: the public operators accept arbitrary leading
 batch dimensions and make exactly one dispatch call per forward pass
 (``repro.kernels.dispatch``), which routes the flattened (rows, n) batch to
 a registered backend — ``"lax"`` (reference ``lax.fori_loop`` stack machine,
-natively batched), ``"pallas"`` (tiled TPU kernel), or ``"minimax"`` (O(n^2)
-closed form for small n / SPMD) — with ``"auto"`` resolving by platform and
-shape.  All backends share this module's exact O(n) backward pass (Lemma 2):
+natively batched), ``"scan"`` (log-depth divide-and-conquer PAV),
+``"pallas"`` (tiled TPU kernel), or ``"minimax"`` (O(n^2) closed form for
+small n / SPMD) — with ``"auto"`` resolving by platform and shape.
+
+The backward pass is exact and O(n) for every forward backend (Lemma 2):
 the Jacobian is block-diagonal with rank-1 blocks, recovered from runs of
-equal values in the forward output, so the VJP is two batched segment
-reductions and never differentiates through solver iterates.
+equal values in the forward output, so the VJP is a couple of batched
+segment reductions and never differentiates through solver iterates.  Those
+reductions are themselves dispatched — ``dispatch_backward`` routes to a
+registered backward backend (``"segscan"`` segmented prefix scans by
+default, ``"scatter"`` segment_sum as the reference formulation; see
+``repro.kernels.segment_vjp``) with its own named-scope attribution and
+metrics.
 """
 
 from __future__ import annotations
@@ -32,57 +39,6 @@ import jax.numpy as jnp
 
 Array = jax.Array
 
-_INT = jnp.int32
-
-
-# ---------------------------------------------------------------------------
-# Block recovery + batched segment reductions shared by all backward passes.
-# ---------------------------------------------------------------------------
-
-
-def _block_ids(v: Array) -> Array:
-  """Per-row segment ids from runs of equal values, v: (B, n) -> (B, n)."""
-  starts = jnp.concatenate(
-      [jnp.ones_like(v[:, :1], bool), v[:, 1:] != v[:, :-1]], axis=-1)
-  return jnp.cumsum(starts.astype(_INT), axis=-1) - 1
-
-
-def _flat_ids(bid: Array) -> Array:
-  """Offset per-row block ids into one global id space (rows never mix)."""
-  b, n = bid.shape
-  return (bid + jnp.arange(b, dtype=_INT)[:, None] * n).reshape(-1)
-
-
-def _segment_sum_bcast(g: Array, bid: Array) -> Array:
-  """Within-block sum broadcast back to positions; g, bid: (B, n)."""
-  b, n = g.shape
-  gid = _flat_ids(bid)
-  s = jax.ops.segment_sum(g.reshape(-1), gid, num_segments=b * n,
-                          indices_are_sorted=True)
-  return s[gid].reshape(b, n)
-
-
-def _segment_mean_bcast(g: Array, bid: Array) -> Array:
-  b, n = g.shape
-  gid = _flat_ids(bid)
-  gsum = jax.ops.segment_sum(g.reshape(-1), gid, num_segments=b * n,
-                             indices_are_sorted=True)
-  cnt = jax.ops.segment_sum(jnp.ones((b * n,), g.dtype), gid,
-                            num_segments=b * n, indices_are_sorted=True)
-  return (gsum / jnp.maximum(cnt, 1))[gid].reshape(b, n)
-
-
-def _segment_softmax(x: Array, bid: Array) -> Array:
-  """softmax within each block (exact, stable); x, bid: (B, n)."""
-  b, n = x.shape
-  gid = _flat_ids(bid)
-  smax = jax.ops.segment_max(x.reshape(-1), gid, num_segments=b * n,
-                             indices_are_sorted=True)
-  ex = jnp.exp(x.reshape(-1) - smax[gid])
-  denom = jax.ops.segment_sum(ex, gid, num_segments=b * n,
-                              indices_are_sorted=True)
-  return (ex / denom[gid]).reshape(b, n)
-
 
 # ---------------------------------------------------------------------------
 # Public, batched, differentiable operators.
@@ -92,6 +48,11 @@ def _segment_softmax(x: Array, bid: Array) -> Array:
 def _dispatch(regularization: str, impl: str | None, *args: Array) -> Array:
   from repro.kernels import dispatch as _d  # lazy: keep core import light
   return _d.dispatch("isotonic", regularization, impl, *args)
+
+
+def _dispatch_bwd(regularization: str, *args: Array):
+  from repro.kernels import dispatch as _d  # lazy: keep core import light
+  return _d.dispatch_backward("isotonic", regularization, None, *args)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
@@ -119,10 +80,7 @@ def _isotonic_l2_fwd(y, impl):
 
 def _isotonic_l2_bwd(impl, v, g):
   # Lemma 2 (Q): dv/dy is block-diagonal with blocks 11^T/|B| (symmetric).
-  n = v.shape[-1]
-  v2, g2 = v.reshape(-1, n), g.reshape(-1, n)
-  out = _segment_mean_bcast(g2, _block_ids(v2))
-  return (out.reshape(v.shape),)
+  return (_dispatch_bwd("l2", v, g),)
 
 
 isotonic_l2.defvjp(_isotonic_l2_fwd, _isotonic_l2_bwd)
@@ -154,12 +112,7 @@ def _isotonic_kl_bwd(impl, res, g):
 
   # Lemma 2 (E): B_j = 1 (x) softmax(s_B); transpose-multiply:
   #   grad_s = softmax(s_B) * sum(g_B);  grad_w = -softmax(w_B) * sum(g_B).
-  n = s.shape[-1]
-  flat = lambda a: a.reshape(-1, n)
-  bid = _block_ids(flat(v))
-  gs = _segment_sum_bcast(flat(g), bid)
-  grad_s = (_segment_softmax(flat(s), bid) * gs).reshape(s.shape)
-  grad_w = (-_segment_softmax(flat(w_b), bid) * gs).reshape(s.shape)
+  grad_s, grad_w = _dispatch_bwd("kl", s, w_b, v, g)
   # Un-broadcast w gradient if w was unbatched.
   if w.shape != s.shape:
     grad_w = jnp.sum(
@@ -177,7 +130,7 @@ isotonic_kl.defvjp(_isotonic_kl_fwd, _isotonic_kl_bwd)
 
 
 def set_default_impl(impl: str) -> None:
-  """Set the process-default backend ("auto" | "lax" | "pallas" | "minimax")."""
+  """Set the process-default backend (one of repro.kernels.dispatch.BACKENDS)."""
   from repro.kernels import dispatch as _d
   _d.set_default_backend(impl)
 

@@ -46,7 +46,7 @@ def soft_sort(
   direction : {"DESCENDING", "ASCENDING"}
       "DESCENDING" (paper primitive) returns values softly sorted from
       largest to smallest; "ASCENDING" is -soft_sort(-values).
-  impl : {"auto", "lax", "pallas", "minimax"} or None
+  impl : {"auto", "lax", "scan", "pallas", "minimax"} or None
       Isotonic backend; None defers to the dispatch default
       (``repro.kernels.dispatch``). Pass explicitly under jit/grad.
 
@@ -97,7 +97,7 @@ def soft_rank(
       "DESCENDING" (paper default): rank 1 for the largest value.
       "ASCENDING": rank 1 for the smallest ( = descending rank of
       -theta ).
-  impl : {"auto", "lax", "pallas", "minimax"} or None
+  impl : {"auto", "lax", "scan", "pallas", "minimax"} or None
       Isotonic backend; see ``repro.kernels.dispatch``. Pass explicitly
       under jit/grad.
 
@@ -136,7 +136,7 @@ def soft_rank_kl_direct(
       Input scores (last axis).
   regularization_strength : float
       eps > 0.
-  impl : {"auto", "lax", "pallas", "minimax"} or None
+  impl : {"auto", "lax", "scan", "pallas", "minimax"} or None
       Isotonic backend (``repro.kernels.dispatch``).
 
   Returns
@@ -180,7 +180,7 @@ def soft_topk_mask(
       eps > 0; small eps approaches the hard 0/1 top-k mask.
   regularization : {"l2", "kl"}
       Psi for the projection.
-  impl : {"auto", "lax", "pallas", "minimax"} or None
+  impl : {"auto", "lax", "scan", "pallas", "minimax"} or None
       Isotonic backend (``repro.kernels.dispatch``).
 
   Returns
@@ -226,7 +226,7 @@ def soft_quantile(
       eps > 0 for the underlying soft sort (Eq. 5).
   regularization : {"l2", "kl"}
       Psi for the projection.
-  impl : {"auto", "lax", "pallas", "minimax"} or None
+  impl : {"auto", "lax", "scan", "pallas", "minimax"} or None
       Isotonic backend (``repro.kernels.dispatch``).
 
   Returns

@@ -1,17 +1,22 @@
 """Backend dispatch for the batched isotonic/projection stack.
 
-Single choke point through which every soft-sort/rank forward pass routes:
-a registry mapping ``(op, regularization, backend)`` -> implementation.
-All registered implementations share the same contract — they take f32-safe
+Single choke point through which every soft-sort/rank pass routes: a
+*forward* registry mapping ``(op, regularization, backend)`` ->
+implementation, and a *backward* registry mapping
+``(op, regularization, backward_backend)`` -> VJP implementation.  All
+registered implementations share the same contract — they take f32-safe
 arrays whose *last* axis is the problem dimension, flattened here to
-``(rows, n)``, and return the same shape — and they all share the exact
-O(n) segment-algebra VJP defined in ``repro.core.isotonic`` (the registry
-only ever dispatches forward passes).
+``(rows, n)``, and return the same shape.
 
-Backends
---------
+Forward backends
+----------------
 * ``"lax"``      reference ``lax.fori_loop`` stack machine, natively batched
-                 (``repro.kernels.pav.pav_l2_lax`` / ``pav_kl_lax``).
+                 (``repro.kernels.pav.pav_l2_lax`` / ``pav_kl_lax``);
+                 O(n) work per row but O(n) *sequential depth*.
+* ``"scan"``     divide-and-conquer PAV (``repro.kernels.pav_scan``):
+                 log2(n) vectorized merge levels — O(n log n) work at
+                 O(log n) depth, the paper's complexity claim realized on
+                 depth-dominated hardware (CPU/GPU).
 * ``"pallas"``   tiled TPU kernel (``repro.kernels.pav``); interpret mode
                  off-TPU, so it is usable (slowly) everywhere.
 * ``"minimax"``  O(n^2) vectorized closed form (``repro.kernels.ref``) with
@@ -20,19 +25,30 @@ Backends
 * ``"auto"``     resolves deterministically from platform and shape at trace
                  time: TPU -> ``"pallas"``; otherwise ``"minimax"`` for
                  small problems (n <= 64 and rows * n^2 bounded) else
-                 ``"lax"``.
+                 ``"scan"``.  An *unknown* shape (``shape=None``) resolves
+                 to ``"scan"`` — never to the O(n^2) closed form.
 
-Selection precedence: explicit ``backend=`` argument > ``REPRO_BACKEND``
-environment variable > ``set_default_backend`` / ``use_backend`` (process
-default, initially ``"auto"``).
+Backward backends
+-----------------
+The exact O(n) segment-algebra VJP (paper Lemma 2) has two registered
+formulations (``repro.kernels.segment_vjp``): ``"segscan"`` (default;
+segmented prefix scans + block-end gathers, scatter-free) and
+``"scatter"`` (the original ``segment_sum`` over globally-offset ids).
+``resolve_backward`` follows the same precedence chain as the forward path
+with its own ``REPRO_BACKWARD`` environment variable.
 
-Observability: every resolution and every dispatched call is recorded into
-``repro.obs.metrics`` (counters keyed by ``(op, regularization, backend)``,
-shape buckets, auto-routing decisions, and trace-cache hit/miss counts),
-and every backend forward runs under a ``jax.named_scope`` so kernels are
-attributable in jaxprs / HLO metadata / ``jax.profiler`` traces.  All of
-this happens at Python trace time only, and is a no-op when metrics are
-disabled (``REPRO_METRICS=0``).
+Selection precedence: explicit ``backend=`` argument > environment variable
+(``REPRO_BACKEND`` / ``REPRO_BACKWARD``) > ``set_default_backend`` /
+``use_backend`` process default (initially ``"auto"``).
+
+Observability: every resolution and every dispatched call (forward and
+backward) is recorded into ``repro.obs.metrics`` (counters keyed by
+``(op, regularization, backend)``, shape buckets, auto-routing decisions,
+and bounded trace-cache hit/miss/eviction counts), and every backend call
+runs under a ``jax.named_scope`` so kernels are attributable in jaxprs /
+HLO metadata / ``jax.profiler`` traces.  All of this happens at Python
+trace time only, and is a no-op when metrics are disabled
+(``REPRO_METRICS=0``).
 """
 
 from __future__ import annotations
@@ -50,22 +66,27 @@ from repro.obs import tracing as _tracing
 Array = jax.Array
 
 ENV_VAR = "REPRO_BACKEND"
+BWD_ENV_VAR = "REPRO_BACKWARD"
 
-BACKENDS = ("auto", "lax", "pallas", "minimax")
+BACKENDS = ("auto", "lax", "scan", "pallas", "minimax")
+BWD_BACKENDS = ("auto", "segscan", "scatter")
 
-# n at or below which the O(n^2) closed form beats the sequential machine
-# off-TPU (no while_loop, trivially vectorized; memory is rows * n^2 floats).
+# n at or below which the O(n^2) closed form beats the log-depth machines
+# off-TPU (no control flow at all, trivially vectorized; memory is
+# rows * n^2 floats).
 AUTO_MINIMAX_MAX_N = 64
 
 # Cap on rows * n^2 f32 elements for auto-selecting minimax (~64 MB): a
 # large flattened batch at small n (the MoE-router regime) must fall back
-# to the O(rows * n) lax machine instead of materializing rows (n, n)
-# matrices.
+# to the O(rows * n log n) scan machine instead of materializing rows
+# (n, n) matrices.
 AUTO_MINIMAX_MAX_ELEMS = 16_000_000
 
 _REGISTRY: dict[tuple[str, str, str], Callable[..., Array]] = {}
+_BWD_REGISTRY: dict[tuple[str, str, str], Callable[..., tuple]] = {}
 
 _DEFAULT = {"value": "auto"}
+_BWD_DEFAULT = {"value": "auto"}
 
 
 def register(op: str, regularization: str, backend: str):
@@ -78,9 +99,26 @@ def register(op: str, regularization: str, backend: str):
   return deco
 
 
+def register_backward(op: str, regularization: str, backend: str):
+  """Decorator: register a VJP impl under (op, regularization, backend)."""
+
+  def deco(fn: Callable[..., tuple]) -> Callable[..., tuple]:
+    _BWD_REGISTRY[(op, regularization, backend)] = fn
+    return fn
+
+  return deco
+
+
 def registered_backends(op: str, regularization: str) -> tuple[str, ...]:
   """Concrete (non-auto) backends registered for an (op, regularization)."""
   return tuple(b for (o, r, b) in _REGISTRY
+               if o == op and r == regularization)
+
+
+def registered_backward_backends(
+    op: str, regularization: str) -> tuple[str, ...]:
+  """Concrete backward backends registered for an (op, regularization)."""
+  return tuple(b for (o, r, b) in _BWD_REGISTRY
                if o == op and r == regularization)
 
 
@@ -106,19 +144,43 @@ def use_backend(backend: str):
     _DEFAULT["value"] = prev
 
 
-def _env_backend() -> str | None:
-  """Validated ``REPRO_BACKEND`` value, or None when unset/empty.
+def get_default_backward() -> str:
+  return _BWD_DEFAULT["value"]
+
+
+def set_default_backward(backend: str) -> None:
+  if backend not in BWD_BACKENDS:
+    raise ValueError(
+        f"backward backend must be one of {BWD_BACKENDS}, got {backend!r}")
+  _BWD_DEFAULT["value"] = backend
+
+
+@contextlib.contextmanager
+def use_backward(backend: str):
+  """Temporarily select the backward (VJP) formulation (trace-time only:
+  like ``use_backend``, custom_vjp bwd rules are traced lazily under jit —
+  eager/top-level ``jax.grad`` calls are the reliable use)."""
+  prev = _BWD_DEFAULT["value"]
+  set_default_backward(backend)
+  try:
+    yield
+  finally:
+    _BWD_DEFAULT["value"] = prev
+
+
+def _env_choice(env_var: str, allowed: tuple[str, ...]) -> str | None:
+  """Validated environment backend value, or None when unset/empty.
 
   Validated at read time: an unknown value would otherwise surface much
   later as a confusing registry KeyError deep inside a traced call.
   """
-  raw = os.environ.get(ENV_VAR)
+  raw = os.environ.get(env_var)
   if not raw:
     return None
-  if raw not in BACKENDS:
+  if raw not in allowed:
     raise ValueError(
-        f"{ENV_VAR}={raw!r} is not a known backend; "
-        f"expected one of {BACKENDS}")
+        f"{env_var}={raw!r} is not a known backend; "
+        f"expected one of {allowed}")
   return raw
 
 
@@ -139,7 +201,7 @@ def resolve_backend(
   if backend:
     b, source = backend, "arg"
   else:
-    env = _env_backend()
+    env = _env_choice(ENV_VAR, BACKENDS)
     if env:
       b, source = env, "env"
     else:
@@ -155,16 +217,22 @@ def resolve_backend(
                          source=source)
     return b
   platform = platform or jax.default_backend()
-  n = shape[-1] if shape else 0
-  rows = 1
-  for d in (shape[:-1] if shape else ()):
-    rows *= d
   if platform == "tpu":
     b, why = "pallas", "tpu"
-  elif n <= AUTO_MINIMAX_MAX_N and rows * n * n <= AUTO_MINIMAX_MAX_ELEMS:
-    b, why = "minimax", "small_n"
+  elif shape is None:
+    # Unknown shape must NOT satisfy the small-n minimax test (an n=0
+    # placeholder would silently pick the O(n^2) backend for arbitrarily
+    # large problems); fall back to the shape-oblivious log-depth machine.
+    b, why = "scan", "shapeless"
   else:
-    b, why = "lax", "large_or_batched"
+    n = shape[-1]
+    rows = 1
+    for d in shape[:-1]:
+      rows *= d
+    if n <= AUTO_MINIMAX_MAX_N and rows * n * n <= AUTO_MINIMAX_MAX_ELEMS:
+      b, why = "minimax", "small_n"
+    else:
+      b, why = "scan", "large_or_batched"
   _metrics.counter_inc("dispatch_resolve", op=op,
                        regularization=regularization, backend=b,
                        source="auto")
@@ -173,13 +241,58 @@ def resolve_backend(
   return b
 
 
+def resolve_backward(
+    op: str,
+    regularization: str,
+    backend: str | None = None,
+) -> str:
+  """Resolve a backward (VJP) backend request: arg > env > default."""
+  if backend:
+    b, source = backend, "arg"
+  else:
+    env = _env_choice(BWD_ENV_VAR, BWD_BACKENDS)
+    if env:
+      b, source = env, "env"
+    else:
+      b, source = _BWD_DEFAULT["value"], "default"
+  if b == "auto":
+    b, source = "segscan", source if source != "default" else "auto"
+  if (op, regularization, b) not in _BWD_REGISTRY:
+    raise ValueError(
+        f"no backward backend {b!r} registered for op={op!r}, "
+        f"regularization={regularization!r}; have "
+        f"{registered_backward_backends(op, regularization)}")
+  _metrics.counter_inc("dispatch_bwd_resolve", op=op,
+                       regularization=regularization, backend=b,
+                       source=source)
+  return b
+
+
 # Trace-key cache: (op, reg, backend, flat shape, dtype) tuples already seen
 # by ``dispatch``.  A repeated key means jit served the call from its
 # compile cache (or re-traced an identical signature); a new key is a fresh
 # trace/compile.  Only mutated while metrics are enabled, and cleared with
-# the registry, so disabled mode retains no state.
-_SEEN_TRACE_KEYS: set[tuple] = set()
+# the registry, so disabled mode retains no state.  Bounded: a long-running
+# server seeing unboundedly many distinct shapes (launch/serve.py ragged
+# batches) must not leak one tuple per shape forever, so insertion order is
+# tracked and the oldest key is evicted at the cap (the eviction count is
+# itself a metric — a hot eviction counter means the cache is thrashing and
+# hit/miss ratios undercount true jit cache hits).
+TRACE_KEY_CAP = 4096
+_SEEN_TRACE_KEYS: dict[tuple, None] = {}
 _metrics.on_reset(_SEEN_TRACE_KEYS.clear)
+
+
+def _trace_cache_note(key: tuple) -> None:
+  """Record hit/miss for a dispatch trace key, evicting at the cap."""
+  if key in _SEEN_TRACE_KEYS:
+    _metrics.counter_inc("dispatch_trace_cache_hit")
+    return
+  while len(_SEEN_TRACE_KEYS) >= TRACE_KEY_CAP:
+    _SEEN_TRACE_KEYS.pop(next(iter(_SEEN_TRACE_KEYS)))
+    _metrics.counter_inc("dispatch_trace_cache_evict")
+  _SEEN_TRACE_KEYS[key] = None
+  _metrics.counter_inc("dispatch_trace_cache_miss")
 
 
 def dispatch(op: str, regularization: str, backend: str | None,
@@ -207,15 +320,33 @@ def dispatch(op: str, regularization: str, backend: str | None,
                          regularization=regularization, backend=b)
     _metrics.counter_inc("dispatch_shape", op=op,
                          bucket=_metrics.shape_bucket(rows, n))
-    key = (op, regularization, b, flat[0].shape,
-           str(jnp.result_type(args[0])))
-    if key in _SEEN_TRACE_KEYS:
-      _metrics.counter_inc("dispatch_trace_cache_hit")
-    else:
-      _SEEN_TRACE_KEYS.add(key)
-      _metrics.counter_inc("dispatch_trace_cache_miss")
+    _trace_cache_note((op, regularization, b, flat[0].shape,
+                       str(jnp.result_type(args[0]))))
   with _tracing.backend_scope(op, regularization, b):
     return fn(*flat).reshape(shape)
+
+
+def dispatch_backward(op: str, regularization: str, backend: str | None,
+                      *args: Array):
+  """Route a batched VJP to the resolved backward backend.
+
+  Same flattening contract as ``dispatch``; the impl may return a single
+  gradient array or a tuple of gradient arrays (each is restored to the
+  original batch shape).  Runs under a ``repro_<op>_bwd_<reg>_<backend>``
+  named scope and records ``dispatch_bwd_calls`` counters.
+  """
+  shape = args[0].shape
+  b = resolve_backward(op, regularization, backend)
+  fn = _BWD_REGISTRY[(op, regularization, b)]
+  n = shape[-1]
+  flat = [a.reshape(-1, n) for a in args]
+  _metrics.counter_inc("dispatch_bwd_calls", op=op,
+                       regularization=regularization, backend=b)
+  with _tracing.backend_scope(f"{op}_bwd", regularization, b):
+    out = fn(*flat)
+  if isinstance(out, tuple):
+    return tuple(o.reshape(shape) for o in out)
+  return out.reshape(shape)
 
 
 # ---------------------------------------------------------------------------
@@ -223,10 +354,15 @@ def dispatch(op: str, regularization: str, backend: str | None,
 # ---------------------------------------------------------------------------
 
 from repro.kernels import pav as _pav  # noqa: E402
+from repro.kernels import pav_scan as _pav_scan  # noqa: E402
 from repro.kernels import ref as _ref  # noqa: E402
+from repro.kernels import segment_vjp as _svjp  # noqa: E402
 
 register("isotonic", "l2", "lax")(_pav.pav_l2_lax)
 register("isotonic", "kl", "lax")(_pav.pav_kl_lax)
+
+register("isotonic", "l2", "scan")(_pav_scan.pav_l2_scan)
+register("isotonic", "kl", "scan")(_pav_scan.pav_kl_scan)
 
 register("isotonic", "l2", "pallas")(_pav.pav_l2)
 register("isotonic", "kl", "pallas")(_pav.pav_kl)
@@ -243,3 +379,9 @@ def _pav_l2_minimax(y: Array) -> Array:
 def _pav_kl_minimax(s: Array, w: Array) -> Array:
   dt = jnp.promote_types(s.dtype, jnp.float32)
   return _ref.pav_kl_ref(s.astype(dt), w.astype(dt)).astype(s.dtype)
+
+
+register_backward("isotonic", "l2", "segscan")(_svjp.isotonic_l2_bwd_segscan)
+register_backward("isotonic", "l2", "scatter")(_svjp.isotonic_l2_bwd_scatter)
+register_backward("isotonic", "kl", "segscan")(_svjp.isotonic_kl_bwd_segscan)
+register_backward("isotonic", "kl", "scatter")(_svjp.isotonic_kl_bwd_scatter)

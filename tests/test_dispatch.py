@@ -23,7 +23,13 @@ BATCHED_SHAPES = [(9,), (2, 3, 17)]
 def test_registry_contains_all_backends_for_both_regs():
   for reg in ("l2", "kl"):
     have = set(D.registered_backends("isotonic", reg))
-    assert {"lax", "pallas", "minimax"} <= have
+    assert {"lax", "scan", "pallas", "minimax"} <= have
+
+
+def test_backward_registry_contains_both_formulations():
+  for reg in ("l2", "kl"):
+    have = set(D.registered_backward_backends("isotonic", reg))
+    assert have == {"segscan", "scatter"}
 
 
 def test_auto_resolution_is_deterministic_per_platform():
@@ -32,14 +38,25 @@ def test_auto_resolution_is_deterministic_per_platform():
       ("tpu", (256, 4096), "pallas"),
       ("cpu", (4, 9), "minimax"),
       ("cpu", (4, D.AUTO_MINIMAX_MAX_N), "minimax"),
-      ("cpu", (4, D.AUTO_MINIMAX_MAX_N + 1), "lax"),
+      ("cpu", (4, D.AUTO_MINIMAX_MAX_N + 1), "scan"),
       # huge flattened batch at small n: rows * n^2 memory rules minimax out
-      ("cpu", (1_000_000, 64), "lax"),
-      ("gpu", (4, 4096), "lax"),
+      ("cpu", (1_000_000, 64), "scan"),
+      ("gpu", (4, 4096), "scan"),
   ]:
     got = [D.resolve_backend("isotonic", "l2", None, shape=shape,
                              platform=platform) for _ in range(3)]
     assert got == [want] * 3, (platform, shape, got)
+
+
+def test_shapeless_auto_resolution_never_picks_minimax():
+  """Regression: shape=None used to read as n=0, satisfying the small-n
+  test and silently routing arbitrarily large problems to the O(n^2)
+  backend."""
+  for platform in ("cpu", "gpu"):
+    assert D.resolve_backend("isotonic", "l2", None, shape=None,
+                             platform=platform) == "scan"
+  assert D.resolve_backend("isotonic", "kl", None, shape=None,
+                           platform="tpu") == "pallas"
 
 
 def test_explicit_backend_wins_over_default():
@@ -80,10 +97,10 @@ def test_isotonic_l2_lax_vs_pallas_fwd_and_vjp(shape):
   y = jnp.array(rng.normal(size=shape).astype(np.float32))
   u = jnp.array(rng.normal(size=shape).astype(np.float32))
   outs, grads = {}, {}
-  for b in ("lax", "pallas", "minimax"):
+  for b in ("lax", "scan", "pallas", "minimax"):
     outs[b] = isotonic_l2(y, b)
     grads[b] = jax.grad(lambda t: jnp.sum(isotonic_l2(t, b) * u))(y)
-  for b in ("pallas", "minimax"):
+  for b in ("scan", "pallas", "minimax"):
     np.testing.assert_allclose(outs[b], outs["lax"], atol=1e-5)
     np.testing.assert_allclose(grads[b], grads["lax"], atol=1e-5)
 
@@ -96,11 +113,11 @@ def test_isotonic_kl_lax_vs_pallas_fwd_and_vjp(shape):
                 jnp.float32)
   u = jnp.array(rng.normal(size=shape).astype(np.float32))
   outs, gss, gws = {}, {}, {}
-  for b in ("lax", "pallas", "minimax"):
+  for b in ("lax", "scan", "pallas", "minimax"):
     outs[b] = isotonic_kl(s, w, b)
     gss[b], gws[b] = jax.grad(
         lambda a, c: jnp.sum(isotonic_kl(a, c, b) * u), argnums=(0, 1))(s, w)
-  for b in ("pallas", "minimax"):
+  for b in ("scan", "pallas", "minimax"):
     np.testing.assert_allclose(outs[b], outs["lax"], atol=5e-5)
     np.testing.assert_allclose(gss[b], gss["lax"], atol=5e-5)
     np.testing.assert_allclose(gws[b], gws["lax"], atol=5e-5)
@@ -123,7 +140,7 @@ def test_soft_ops_backends_agree_end_to_end(reg, shape):
   op = soft_rank
   f_lax = loss(theta, "lax", op)
   g_lax = jax.grad(lambda t: loss(t, "lax", op))(theta)
-  for b in ("pallas", "minimax"):
+  for b in ("scan", "pallas", "minimax"):
     np.testing.assert_allclose(loss(theta, b, op), f_lax, atol=1e-5)
     np.testing.assert_allclose(
         jax.grad(lambda t: loss(t, b, op))(theta), g_lax, atol=1e-5)
@@ -162,7 +179,7 @@ def test_vjp_matches_finite_difference_batched_all_backends():
   eps = 1e-3
   # pallas omitted: its VJP is literally the same backward function (only
   # forwards differ), and grad equality to lax is asserted above.
-  for b in ("lax", "minimax"):
+  for b in ("lax", "scan", "minimax"):
     f = lambda t: jnp.sum(isotonic_l2(t, b) * u)
     g = jax.grad(f)(y)
     fd = np.zeros((2, 5), np.float32)
@@ -171,3 +188,82 @@ def test_vjp_matches_finite_difference_batched_all_backends():
         fd[i, j] = (f(y.at[i, j].add(eps))
                     - f(y.at[i, j].add(-eps))) / (2 * eps)
     np.testing.assert_allclose(g, fd, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# Backward (VJP) dispatch: segscan vs scatter formulations.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", BATCHED_SHAPES + [(5, 64), (3, 100)])
+def test_l2_backward_backends_agree(shape):
+  """New default (segscan) vs reference (scatter): max abs diff <= 1e-5."""
+  y = jnp.array(rng.normal(size=shape).astype(np.float32))
+  u = jnp.array(rng.normal(size=shape).astype(np.float32))
+  f = lambda t: jnp.sum(isotonic_l2(t) * u)
+  with D.use_backward("segscan"):
+    g_new = jax.grad(f)(y)
+  with D.use_backward("scatter"):
+    g_old = jax.grad(f)(y)
+  assert float(jnp.max(jnp.abs(g_new - g_old))) <= 1e-5
+
+
+@pytest.mark.parametrize("shape", BATCHED_SHAPES + [(5, 64)])
+def test_kl_backward_backends_agree(shape):
+  s = jnp.array(rng.normal(size=shape).astype(np.float32))
+  w = jnp.array(rng.normal(size=shape).astype(np.float32))
+  u = jnp.array(rng.normal(size=shape).astype(np.float32))
+  f = lambda a, c: jnp.sum(isotonic_kl(a, c) * u)
+  grads = {}
+  for b in ("segscan", "scatter"):
+    with D.use_backward(b):
+      grads[b] = jax.grad(f, argnums=(0, 1))(s, w)
+  for new, old in zip(grads["segscan"], grads["scatter"]):
+    assert float(jnp.max(jnp.abs(new - old))) <= 1e-5
+
+
+def test_backward_resolution_precedence(monkeypatch):
+  # default: auto -> segscan
+  assert D.resolve_backward("isotonic", "l2", None) == "segscan"
+  # env overrides default
+  monkeypatch.setenv(D.BWD_ENV_VAR, "scatter")
+  assert D.resolve_backward("isotonic", "l2", None) == "scatter"
+  # explicit argument wins over env
+  assert D.resolve_backward("isotonic", "l2", "segscan") == "segscan"
+  monkeypatch.delenv(D.BWD_ENV_VAR)
+  with pytest.raises(ValueError):
+    D.resolve_backward("isotonic", "l2", "cuda")
+  with pytest.raises(ValueError):
+    D.set_default_backward("nope")
+
+
+def test_use_backward_restores_previous_default():
+  before = D.get_default_backward()
+  with pytest.raises(RuntimeError):
+    with D.use_backward("scatter"):
+      raise RuntimeError("boom")
+  assert D.get_default_backward() == before
+
+
+# ---------------------------------------------------------------------------
+# Trace-key cache stays bounded.
+# ---------------------------------------------------------------------------
+
+
+def test_trace_key_cache_is_capped_and_counts_evictions(monkeypatch):
+  from repro.obs import metrics
+  monkeypatch.setattr(D, "TRACE_KEY_CAP", 3)
+  metrics.set_enabled(True)
+  try:
+    metrics.reset()
+    for n in range(2, 10):  # 8 distinct shapes through a cap of 3
+      D.dispatch("isotonic", "l2", "lax", jnp.zeros((1, n), jnp.float32))
+    assert len(D._SEEN_TRACE_KEYS) <= 3
+    evicts = sum(metrics.counters("dispatch_trace_cache_evict").values())
+    assert evicts == 5
+    # repeats hit, never evict
+    D.dispatch("isotonic", "l2", "lax", jnp.zeros((1, 9), jnp.float32))
+    assert sum(metrics.counters("dispatch_trace_cache_hit").values()) == 1
+  finally:
+    metrics.set_enabled(None)
+    metrics.reset()

@@ -63,6 +63,8 @@ def test_l2_matches_exhaustive(trial):
   np.testing.assert_allclose(pav_l2_ref(jnp.array(y)), want, atol=1e-4)
   np.testing.assert_allclose(
       isotonic_l2(jnp.array(y), "minimax"), want, atol=1e-4)
+  np.testing.assert_allclose(
+      isotonic_l2(jnp.array(y), "scan"), want, atol=1e-4)
 
 
 @pytest.mark.parametrize("trial", range(8))
@@ -75,6 +77,8 @@ def test_kl_matches_exhaustive(trial):
       isotonic_kl(jnp.array(s), jnp.array(w)), want, atol=1e-4)
   np.testing.assert_allclose(
       pav_kl_ref(jnp.array(s), jnp.array(w)), want, atol=1e-4)
+  np.testing.assert_allclose(
+      isotonic_kl(jnp.array(s), jnp.array(w), "scan"), want, atol=1e-4)
 
 
 def test_solution_is_monotone_and_preserves_block_means():
@@ -126,3 +130,5 @@ def test_impls_agree_large_n():
   y = jnp.array(rng.normal(size=(4, 257)).astype(np.float32))
   np.testing.assert_allclose(
       isotonic_l2(y), isotonic_l2(y, "minimax"), atol=1e-4)
+  np.testing.assert_allclose(
+      isotonic_l2(y, "scan"), isotonic_l2(y, "minimax"), atol=1e-4)

@@ -53,7 +53,7 @@ def test_auto_route_counter_labels_platform_and_reason():
   c = metrics.counters("dispatch_auto_route")
   assert c["dispatch_auto_route{backend=minimax,platform=cpu,"
            "reason=small_n}"] == 1
-  assert c["dispatch_auto_route{backend=lax,platform=cpu,"
+  assert c["dispatch_auto_route{backend=scan,platform=cpu,"
            "reason=large_or_batched}"] == 1
   assert c["dispatch_auto_route{backend=pallas,platform=tpu,"
            "reason=tpu}"] == 1
@@ -71,7 +71,7 @@ def test_disabled_mode_records_no_state():
   jax.grad(lambda t: jnp.sum(soft_rank(t, 0.5, "kl", impl="minimax")))(x)
   assert metrics.counters() == {}
   assert metrics.histograms() == {}
-  assert D._SEEN_TRACE_KEYS == set()
+  assert D._SEEN_TRACE_KEYS == {}
   snap = metrics.snapshot()
   assert snap == {"enabled": False, "counters": {}, "histograms": {}}
 

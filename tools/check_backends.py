@@ -1,0 +1,122 @@
+#!/usr/bin/env python3
+"""Backend-registry gate: docs coverage + bench-artifact completeness.
+
+  PYTHONPATH=src python tools/check_backends.py [--bench BENCH_runtime.json]
+
+Two checks (the first always runs, the second only with ``--bench``):
+
+1. **Docs coverage** — every backend key registered in
+   ``repro.kernels.dispatch`` (forward AND backward registries, plus the
+   ``auto`` aliases) must appear as an inline-code token in the README
+   backend table and in ``docs/ARCHITECTURE.md``, so a new backend cannot
+   ship undocumented and the docs cannot keep advertising a deleted one
+   (documented-but-unregistered names fail too).
+
+2. **Bench completeness** — the given ``BENCH_runtime.json`` must contain,
+   for every registered concrete forward backend and both regularizations,
+   at least one result row that actually ran (a finite ``*_us`` timing
+   field — a row that was skipped everywhere does not count), so the CI
+   perf trajectory can never silently lose a backend.
+
+Exit status 0 = clean; 1 = problems (each printed on stderr).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DOC_FILES = ("README.md", os.path.join("docs", "ARCHITECTURE.md"))
+
+_CODE_TOKEN_RE = re.compile(r"`\"?([a-z_]+)\"?`")
+
+
+def _registered() -> tuple[set[str], set[str]]:
+  from repro.kernels import dispatch as D
+  fwd = set()
+  for reg in ("l2", "kl"):
+    fwd |= set(D.registered_backends("isotonic", reg))
+  bwd = set()
+  for reg in ("l2", "kl"):
+    bwd |= set(D.registered_backward_backends("isotonic", reg))
+  return fwd, bwd
+
+
+def check_docs_coverage() -> list[str]:
+  from repro.kernels import dispatch as D
+  problems = []
+  fwd, bwd = _registered()
+  # "auto" is a registered alias in both selection chains even though it
+  # never appears as a registry key.
+  want = fwd | bwd | {"auto"}
+  known = set(D.BACKENDS) | set(D.BWD_BACKENDS)
+  for rel in DOC_FILES:
+    path = os.path.join(REPO_ROOT, rel)
+    with open(path, encoding="utf-8") as f:
+      text = f.read()
+    documented = set(_CODE_TOKEN_RE.findall(text))
+    for backend in sorted(want - documented):
+      problems.append(f"{rel}: registered backend {backend!r} is not "
+                      f"documented (expected a `\"{backend}\"` or "
+                      f"`{backend}` code token)")
+    # Docs naming a backend that is neither registered nor a selection
+    # alias are advertising something the registry cannot serve.
+    stale = {b for b in documented & (known - want - {"auto"})}
+    for backend in sorted(stale):
+      problems.append(f"{rel}: documents backend {backend!r} which is not "
+                      f"registered")
+  return problems
+
+
+def check_bench_artifact(path: str) -> list[str]:
+  problems = []
+  if not os.path.exists(path):
+    return [f"{path}: artifact not found"]
+  with open(path, encoding="utf-8") as f:
+    payload = json.load(f)
+  results = payload.get("results", [])
+  fwd, _ = _registered()
+  for backend in sorted(fwd):
+    for reg in ("l2", "kl"):
+      rows = [r for r in results
+              if r.get("backend") == backend
+              and r.get("regularization") == reg]
+      if not rows:
+        problems.append(f"{path}: no results for backend={backend!r} "
+                        f"regularization={reg!r}")
+        continue
+      ran = [r for r in rows if any(
+          k.endswith("_us") and isinstance(r[k], (int, float))
+          for k in r)]
+      if not ran:
+        problems.append(f"{path}: backend={backend!r} "
+                        f"regularization={reg!r} has only skipped rows "
+                        f"({rows[0].get('skipped', '?')!r}) — at least one "
+                        f"cell must actually run")
+  return problems
+
+
+def main(argv: list[str]) -> int:
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--bench", default=None,
+                  help="also assert BENCH_runtime.json covers every "
+                       "registered backend with a real timing")
+  args = ap.parse_args(argv)
+
+  problems = check_docs_coverage()
+  if args.bench:
+    problems += check_bench_artifact(args.bench)
+  for p in problems:
+    print(p, file=sys.stderr)
+  checked = "docs" + (f" + {args.bench}" if args.bench else "")
+  print(f"check_backends: {checked}, {len(problems)} problems")
+  return 1 if problems else 0
+
+
+if __name__ == "__main__":
+  raise SystemExit(main(sys.argv[1:]))
