@@ -1,0 +1,128 @@
+"""Fused vs composed projection pipeline -> BENCH_projection.json.
+
+The tentpole evidence for the fused projection op (ISSUE 8): end-to-end
+``soft_rank`` forward and forward+backward, per regularization, for both
+registered projection paths — ``"fused"`` (whole-pipeline custom VJP,
+packed integer sorts, gather-only backward) and ``"composed"`` (the
+reference chain of four differentiable primitives) — measured *in the same
+run* so the speedup column is an apples-to-apples ratio.  Each cell also
+records the bare isotonic solve (``iso_fwd_us``) and the derived
+``solver_share`` so the wrapper-vs-solver split is tracked per PR.
+
+The acceptance bar lives in the ``projection/<reg>/speedup/...`` rows:
+fused must be >= 2x composed on e2e fwd+bwd for l2/scan at n=1024, b=8 on
+CPU (``tools/check_backends.py --bench-projection`` gates >= 1x in CI so a
+regression can never land silently).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import soft_rank
+from repro.core.isotonic import isotonic_kl, isotonic_l2
+from repro.kernels import dispatch as dispatch_mod
+from repro.obs import artifacts as obs_artifacts
+
+BATCH = 8
+PROJ_NS = (1024, 4096)
+SMOKE_NS = (1024,)        # the acceptance cell must survive the smoke cut
+IMPL = "scan"             # the off-TPU auto default; fixes the solver so
+                          # the two paths differ only in the wrapper
+
+
+@contextlib.contextmanager
+def _projection_path(path: str):
+  """Select the projection path for everything traced inside the block."""
+  prev = os.environ.get(dispatch_mod.PROJECTION_ENV_VAR)
+  os.environ[dispatch_mod.PROJECTION_ENV_VAR] = path
+  try:
+    yield
+  finally:
+    if prev is None:
+      os.environ.pop(dispatch_mod.PROJECTION_ENV_VAR, None)
+    else:
+      os.environ[dispatch_mod.PROJECTION_ENV_VAR] = prev
+
+
+def run(smoke: bool = False,
+        out_path: str = "BENCH_projection.json") -> dict:
+  """Time both projection paths and write the schema-v1 artifact."""
+  import repro.core.projection  # noqa: F401  (populate the registry)
+  ns = SMOKE_NS if smoke else PROJ_NS
+  rng = np.random.default_rng(0)
+  iters = 3 if smoke else 5
+
+  results = []
+  for n in ns:
+    theta = jnp.array(rng.normal(size=(BATCH, n)).astype(np.float32))
+    for reg in ("l2", "kl"):
+      # Bare solver timing: identical for both paths by construction
+      # (same backend, same flattened batch) — measured once per cell.
+      if reg == "l2":
+        iso = jax.jit(functools.partial(isotonic_l2, impl=IMPL))
+        iso_args = (theta,)
+      else:
+        iso = jax.jit(functools.partial(isotonic_kl, impl=IMPL))
+        iso_args = (theta, jnp.zeros_like(theta))
+      iso_fwd_us = time_fn(iso, *iso_args, warmup=1, iters=iters)
+
+      cell: dict[str, dict] = {}
+      for path in sorted(set(
+          dispatch_mod.registered_backends("projection", reg))):
+        name = f"projection/{reg}/{path}/n={n}/b={BATCH}"
+        with _projection_path(path):
+          fwd = jax.jit(functools.partial(
+              soft_rank, regularization_strength=0.1, regularization=reg,
+              impl=IMPL))
+          bwd = jax.jit(jax.grad(lambda t, f=fwd: jnp.sum(f(t) ** 2)))
+          e2e_fwd = time_fn(fwd, theta, warmup=2, iters=iters, name=name)
+          e2e_fwd_bwd = time_fn(bwd, theta, warmup=2, iters=iters,
+                                name=name + "/bwd")
+        rec = {
+            "name": name, "op": "soft_rank", "regularization": reg,
+            "backend": path, "n": n, "batch": BATCH, "impl": IMPL,
+            "e2e_fwd_us": e2e_fwd, "e2e_fwd_bwd_us": e2e_fwd_bwd,
+            "iso_fwd_us": iso_fwd_us,
+            "solver_share": round(iso_fwd_us / e2e_fwd, 4),
+        }
+        results.append(rec)
+        cell[path] = rec
+        emit(name, e2e_fwd,
+             f"fwd; fwd+bwd={e2e_fwd_bwd:.1f}us; "
+             f"solver_share={rec['solver_share']:.2f}", collect=False)
+
+      fused, composed = cell.get("fused"), cell.get("composed")
+      if fused and composed:
+        speedup = composed["e2e_fwd_bwd_us"] / fused["e2e_fwd_bwd_us"]
+        results.append({
+            "name": f"projection/{reg}/speedup/n={n}/b={BATCH}",
+            "op": "soft_rank", "regularization": reg,
+            "backend": "fused_vs_composed", "n": n, "batch": BATCH,
+            "impl": IMPL,
+            "fused_fwd_bwd_us": fused["e2e_fwd_bwd_us"],
+            "composed_fwd_bwd_us": composed["e2e_fwd_bwd_us"],
+            "fwd_speedup_x": round(
+                composed["e2e_fwd_us"] / fused["e2e_fwd_us"], 3),
+            "speedup_x": round(speedup, 3),
+        })
+        emit(f"projection/{reg}/speedup/n={n}/b={BATCH}",
+             fused["e2e_fwd_bwd_us"],
+             f"fused is {speedup:.2f}x vs composed (fwd+bwd)",
+             collect=False)
+
+  meta = obs_artifacts.collect_meta(
+      smoke=smoke, suite="projection", batch=BATCH, impl=IMPL,
+      default_path=dispatch_mod.resolve_projection(None))
+  return obs_artifacts.write_bench_artifact(out_path, results, meta)
+
+
+if __name__ == "__main__":
+  run()

@@ -82,7 +82,9 @@ def run():
 
 # 1024 is in both tiers on purpose: the scan-vs-lax >=2x acceptance bar is
 # stated at n >= 1024, so even smoke artifacts carry the evidence cell.
-SWEEP_NS = (100, 1024, 10000)
+# 4096 sits between the acceptance cell and the tail so the e2e/solver
+# split is visible where the sort fast path matters most.
+SWEEP_NS = (100, 1024, 4096, 10000)
 SWEEP_BATCHES = (1, 32, 256)
 SMOKE_NS = (64, 1024)
 SMOKE_BATCHES = (1, 8)
@@ -151,10 +153,19 @@ def run_backend_sweep(smoke: bool = False,
             iso_args = (theta, jnp.zeros_like(theta))
           rec["iso_fwd_us"] = time_fn(iso, *iso_args, warmup=1, iters=iters,
                                       name=name + "/iso")
+          # e2e_fwd_us aliases fwd_us under the projection-suite column
+          # name, and solver_share = iso/e2e makes the wrapper-vs-solver
+          # split a first-class per-cell stat (a share near 1.0 means the
+          # backend is the bottleneck; near 0 means sort/permutation
+          # overhead dominates and the fused projection path is what to
+          # optimize).
+          rec["e2e_fwd_us"] = rec["fwd_us"]
+          rec["solver_share"] = round(rec["iso_fwd_us"] / rec["fwd_us"], 4)
           results.append(rec)
           emit(name, rec["fwd_us"],
                f"fwd; bwd={rec['fwd_bwd_us']:.1f}us; "
-               f"iso={rec['iso_fwd_us']:.1f}us",
+               f"iso={rec['iso_fwd_us']:.1f}us; "
+               f"solver_share={rec['solver_share']:.2f}",
                collect=False)
 
   meta = obs_artifacts.collect_meta(

@@ -13,6 +13,9 @@ these:
 * ``BENCH_depth_curve.json`` — the O(n)-depth ("lax") vs O(log n)-depth
   ("scan") isotonic-solve curve across n with per-n speedups, emitted by
   both the full run and ``--smoke``;
+* ``BENCH_projection.json`` — fused vs composed projection-pipeline
+  e2e fwd / fwd+bwd timings with per-cell speedups and solver share,
+  emitted by both the full run and ``--smoke``;
 * ``BENCH_figures.json`` — every other paper-figure/table benchmark row,
   emitted by the full run.
 
@@ -20,10 +23,10 @@ Both artifacts embed the ``repro.obs`` metrics snapshot (per-backend
 dispatch-resolution counters, shape buckets, trace-cache counts) taken at
 write time, plus provenance meta (git sha, platform, jax version).
 
-``--smoke`` runs only the backend sweep and depth curve at reduced sizes
-(n=1024 included so the scan-vs-lax speedup evidence survives the cut): a
-fast signal that every registered backend still executes and emits
-schema-valid artifacts.
+``--smoke`` runs only the backend sweep, depth curve, and projection
+suite at reduced sizes (n=1024 included so the scan-vs-lax and
+fused-vs-composed speedup evidence survives the cut): a fast signal that
+every registered backend still executes and emits schema-valid artifacts.
 """
 
 from __future__ import annotations
@@ -35,6 +38,7 @@ import traceback
 from benchmarks import (
     bench_label_ranking,
     bench_lts,
+    bench_projection,
     bench_router,
     bench_runtime,
     bench_topk,
@@ -51,6 +55,7 @@ BENCHES = {
     "router": bench_router.run,               # framework hot path
     "backend_sweep": bench_runtime.run_backend_sweep,  # BENCH_runtime.json
     "depth_curve": bench_runtime.run_depth_curve,      # BENCH_depth_curve.json
+    "projection": bench_projection.run,                # BENCH_projection.json
 }
 
 
@@ -71,6 +76,7 @@ def main() -> None:
   if args.smoke:
     bench_runtime.run_backend_sweep(smoke=True)
     bench_runtime.run_depth_curve(smoke=True)
+    bench_projection.run(smoke=True)
     return
 
   names = args.only.split(",") if args.only else list(BENCHES)

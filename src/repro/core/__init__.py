@@ -28,9 +28,11 @@ from repro.core.operators import (
     soft_sort,
     soft_topk_mask,
 )
+from repro.core.permutations import SortContext
 from repro.core.projection import projection_permutahedron
 
 __all__ = [
+    "SortContext",
     "isotonic_kl",
     "isotonic_l2",
     "set_default_impl",

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.operators import soft_rank, soft_sort
+from repro.core.permutations import SortContext
 
 Array = jax.Array
 
@@ -27,13 +28,19 @@ def soft_spearman_loss(
     regularization_strength: float = 1.0,
     regularization: str = "l2",
     direction: str = "ASCENDING",
+    sort_context: SortContext | None = None,
 ) -> Array:
   """1/2 ||target_ranks - r_eps(theta)||^2, averaged over batch.
 
   Maximizing Spearman's rho is equivalent to minimizing the squared loss
   between ranks (paper §6.3); the soft rank makes it differentiable.
+  Callers ranking the same scores more than once per step (e.g. an eps
+  sweep, or ranking both directions) should build one
+  ``SortContext(theta)`` and pass it here so every call shares a single
+  argsort.
   """
-  r = soft_rank(theta, regularization_strength, regularization, direction)
+  r = soft_rank(theta, regularization_strength, regularization, direction,
+                sort_context=sort_context)
   per_example = 0.5 * jnp.sum((r - target_ranks) ** 2, axis=-1)
   return jnp.mean(per_example)
 
@@ -103,16 +110,20 @@ def soft_lts_loss(
     trim_count: int,
     regularization_strength: float = 1.0,
     regularization: str = "l2",
+    sort_context: SortContext | None = None,
 ) -> Array:
   """Mean of the soft-sorted losses with the largest `trim_count` dropped.
 
   (paper Eq. 10): losses are soft-sorted descending and entries k+1..n are
   averaged.  eps -> 0 recovers hard least trimmed squares; eps -> inf
   recovers plain least squares (interpolation validated in benchmarks).
+  A ``SortContext(losses)`` built by the caller lets repeated trims of
+  the same residuals (IRLS-style steps, trim-fraction sweeps) share one
+  argsort.
   """
   n = losses.shape[-1]
   s = soft_sort(losses, regularization_strength, regularization,
-                direction="DESCENDING")
+                direction="DESCENDING", sort_context=sort_context)
   kept = s[..., trim_count:]
   return jnp.sum(kept, axis=-1) / (n - trim_count)
 

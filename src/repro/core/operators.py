@@ -11,6 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.permutations import SortContext
 from repro.core.projection import projection_permutahedron
 
 Array = jax.Array
@@ -22,12 +23,27 @@ def _rho(n: int, dtype) -> Array:
   return jnp.arange(n, 0, -1, dtype=dtype)
 
 
+def _ctx_perm(sort_context: SortContext | None, descending: bool):
+  """(sigma, sigma^{-1}) of the context's values in the given direction.
+
+  Tie order may differ from a fresh argsort of the transformed argument
+  (operators negate/scale their input before projecting), which is
+  harmless: equal values merge into one isotonic block either way.
+  """
+  if sort_context is None:
+    return None
+  _, sigma, sigma_inv = (sort_context.descending() if descending
+                         else sort_context.ascending())
+  return sigma, sigma_inv
+
+
 def soft_sort(
     values: Array,
     regularization_strength: float = 1.0,
     regularization: str = "l2",
     direction: str = "DESCENDING",
     impl: str | None = None,
+    sort_context: SortContext | None = None,
 ) -> Array:
   """Soft sort: s_{eps*Psi}(theta) = P_Psi(rho/eps, theta) (paper Eq. 5).
 
@@ -49,6 +65,10 @@ def soft_sort(
   impl : {"auto", "lax", "scan", "pallas", "minimax"} or None
       Isotonic backend; None defers to the dispatch default
       (``repro.kernels.dispatch``). Pass explicitly under jit/grad.
+  sort_context : SortContext or None
+      A ``SortContext`` built on ``values``; supplies the argsort
+      permutation so several operators over the same tensor share one
+      sort (trace-local — see the class docstring for the jit caveat).
 
   Returns
   -------
@@ -61,18 +81,23 @@ def soft_sort(
   PAV isotonic solve (paper §5) — versus O(n^2) for All-pairs and
   O(T n^2) for OT/Sinkhorn relaxations. The backward pass is the exact
   O(n) segment-algebra VJP of Lemma 2, never unrolled solver iterates.
+  The projection's z argument (rho/eps) is descending by construction,
+  so the fused pipeline (``repro.core.projection``) skips that sort
+  entirely via ``z_is_sorted``.
   """
   if direction not in _DIRECTIONS:
     raise ValueError(f"direction must be one of {_DIRECTIONS}")
   values = jnp.asarray(values)
-  if direction == "ASCENDING":
-    return -soft_sort(-values, regularization_strength, regularization,
-                      impl=impl)
   eps = regularization_strength
   n = values.shape[-1]
-  z = _rho(n, values.dtype) / eps
-  z = jnp.broadcast_to(z, values.shape)
-  return projection_permutahedron(z, values, regularization, impl)
+  descending = direction == "DESCENDING"
+  # ASCENDING is -P(rho/eps, -theta): same sorted z, negated weights.
+  w = values if descending else -values
+  z = jnp.broadcast_to(_rho(n, values.dtype) / eps, values.shape)
+  out = projection_permutahedron(
+      z, w, regularization, impl, z_is_sorted=True,
+      w_perm=_ctx_perm(sort_context, descending=descending))
+  return out if descending else -out
 
 
 def soft_rank(
@@ -81,6 +106,7 @@ def soft_rank(
     regularization: str = "l2",
     direction: str = "DESCENDING",
     impl: str | None = None,
+    sort_context: SortContext | None = None,
 ) -> Array:
   """Soft rank: r_{eps*Psi}(theta) = P_Psi(-theta/eps, rho) (paper Eq. 6).
 
@@ -100,6 +126,10 @@ def soft_rank(
   impl : {"auto", "lax", "scan", "pallas", "minimax"} or None
       Isotonic backend; see ``repro.kernels.dispatch``. Pass explicitly
       under jit/grad.
+  sort_context : SortContext or None
+      A ``SortContext`` built on ``values``; supplies the argsort
+      permutation so several operators over the same tensor share one
+      sort (trace-local — see the class docstring for the jit caveat).
 
   Returns
   -------
@@ -110,22 +140,30 @@ def soft_rank(
   -----
   O(n log n) per row (sort + linear PAV, §5) with the exact O(n) VJP of
   Lemma 2 — the differentiability does not cost an O(n^2) Jacobian.
+  The projection's weight rho is descending by construction, so the
+  fused pipeline never sorts it (``w_is_sorted``).
   """
   if direction not in _DIRECTIONS:
     raise ValueError(f"direction must be one of {_DIRECTIONS}")
   values = jnp.asarray(values)
-  if direction == "ASCENDING":
-    return soft_rank(-values, regularization_strength, regularization,
-                     impl=impl)
   eps = regularization_strength
   n = values.shape[-1]
+  descending = direction == "DESCENDING"
+  # DESCENDING projects -theta/eps; ASCENDING is the descending rank of
+  # -theta, i.e. projects +theta/eps.  Sorting z descending is sorting
+  # theta ascending (resp. descending), which a SortContext serves.
+  z = (-values if descending else values) / eps
   w = _rho(n, values.dtype)
-  return projection_permutahedron(-values / eps, w, regularization, impl)
+  return projection_permutahedron(
+      z, w, regularization, impl, w_is_sorted=True,
+      z_perm=_ctx_perm(sort_context, descending=not descending))
 
 
 def soft_rank_kl_direct(
     values: Array, regularization_strength: float = 1.0,
-    impl: str | None = None) -> Array:
+    direction: str = "DESCENDING",
+    impl: str | None = None,
+    sort_context: SortContext | None = None) -> Array:
   """Appendix variant r~_E: KL projection directly onto P(rho), not P(e^rho).
 
   r~_{eps E}(theta) = exp(P_E(-theta/eps, log rho)).
@@ -136,8 +174,14 @@ def soft_rank_kl_direct(
       Input scores (last axis).
   regularization_strength : float
       eps > 0.
+  direction : {"DESCENDING", "ASCENDING"}
+      "DESCENDING" (paper default): rank 1 for the largest value;
+      "ASCENDING" is the descending variant of -theta.
   impl : {"auto", "lax", "scan", "pallas", "minimax"} or None
       Isotonic backend (``repro.kernels.dispatch``).
+  sort_context : SortContext or None
+      A ``SortContext`` built on ``values`` (shares the argsort with
+      other operators over the same tensor; trace-local under jit).
 
   Returns
   -------
@@ -147,13 +191,21 @@ def soft_rank_kl_direct(
   Notes
   -----
   Same O(n log n) forward / O(n) backward as ``soft_rank``; only the
-  target polytope differs (paper appendix discussion of r~_E).
+  target polytope differs (paper appendix discussion of r~_E).  The
+  weight log(rho) is descending by construction (log is monotone), so
+  the fused pipeline never sorts it.
   """
+  if direction not in _DIRECTIONS:
+    raise ValueError(f"direction must be one of {_DIRECTIONS}")
   values = jnp.asarray(values)
   eps = regularization_strength
   n = values.shape[-1]
+  descending = direction == "DESCENDING"
+  z = (-values if descending else values) / eps
   w = jnp.log(_rho(n, values.dtype))
-  return jnp.exp(projection_permutahedron(-values / eps, w, "kl", impl))
+  return jnp.exp(projection_permutahedron(
+      z, w, "kl", impl, w_is_sorted=True,
+      z_perm=_ctx_perm(sort_context, descending=not descending)))
 
 
 def soft_topk_mask(
@@ -162,6 +214,7 @@ def soft_topk_mask(
     regularization_strength: float = 1.0,
     regularization: str = "l2",
     impl: str | None = None,
+    sort_context: SortContext | None = None,
 ) -> Array:
   """Differentiable top-k indicator in [0, 1]^n summing to k.
 
@@ -199,11 +252,14 @@ def soft_topk_mask(
   values = jnp.asarray(values)
   eps = regularization_strength
   n = values.shape[-1]
+  # The k-ones mask is descending by construction: never sorted.
   w = jnp.concatenate([
       jnp.ones((k,), values.dtype),
       jnp.zeros((n - k,), values.dtype),
   ])
-  return projection_permutahedron(values / eps, w, regularization, impl)
+  return projection_permutahedron(
+      values / eps, w, regularization, impl, w_is_sorted=True,
+      z_perm=_ctx_perm(sort_context, descending=True))
 
 
 def soft_quantile(
@@ -212,6 +268,7 @@ def soft_quantile(
     regularization_strength: float = 0.1,
     regularization: str = "l2",
     impl: str | None = None,
+    sort_context: SortContext | None = None,
 ) -> Array:
   """Differentiable q-quantile via the soft sort (ascending).
 
@@ -228,6 +285,9 @@ def soft_quantile(
       Psi for the projection.
   impl : {"auto", "lax", "scan", "pallas", "minimax"} or None
       Isotonic backend (``repro.kernels.dispatch``).
+  sort_context : SortContext or None
+      A ``SortContext`` built on ``values``: the underlying ascending
+      soft sort reuses the caller's argsort instead of re-sorting.
 
   Returns
   -------
@@ -242,7 +302,8 @@ def soft_quantile(
   values = jnp.asarray(values)
   n = values.shape[-1]
   s = soft_sort(values, regularization_strength, regularization,
-                direction="ASCENDING", impl=impl)
+                direction="ASCENDING", impl=impl,
+                sort_context=sort_context)
   idx = jnp.clip(jnp.asarray(round(q * (n - 1)), jnp.int32), 0, n - 1)
   return s[..., idx]
 

@@ -8,6 +8,27 @@ constant) permutation to the cotangent", so we compute permutations under
 ``stop_gradient`` and apply them with plain gathers — mathematically
 identical to sort's own JVP rule, and robust here.  (Documented in
 DESIGN.md §10.)
+
+Fast path
+---------
+XLA:CPU (and GPU) have a radix-style fast path for *single-operand integer*
+sorts, while any variadic/comparator sort (``argsort``, value+index pair
+sorts, float sorts) falls back to a ~4-6x slower comparison sort.
+``argsort_descending_fast`` exploits this: f32 keys are bitcast to u32,
+mapped through the order-preserving total order on float bits, packed with
+the position index into one u64 word (``bitcast_convert_type`` of a
+trailing ``(..., 2)`` u32 axis — no 64-bit constants, so it lowers cleanly
+whatever the x64 mode), and sorted as a single integer key.  The low word
+of the result is a stable argsort permutation and the high word unpacks
+*bit-exactly* to the sorted values.  ``invert_permutation_fast`` applies
+the same trick to invert a permutation without a scatter.  The only
+divergence from ``jnp.argsort`` semantics: ``-0.0`` and ``+0.0`` are
+ordered by their (distinct) bit patterns rather than treated as equal keys
+— numerically irrelevant downstream, where equal values merge into one
+isotonic block anyway.
+
+All permutations produced by this module are int32 end-to-end (an n that
+overflows int32 would OOM long before the index dtype matters).
 """
 
 from __future__ import annotations
@@ -18,14 +39,21 @@ from jax import lax
 
 Array = jax.Array
 
+_INT = jnp.int32
+_SIGN_BIT = 0x80000000
+# u32 inverse packing needs sigma * n + iota < 2**32.
+_U32_INVERT_MAX_N = 65535
+
 
 def argsort_descending(x: Array, axis: int = -1) -> Array:
-  """Non-differentiable descending argsort (stable)."""
-  return jnp.argsort(-lax.stop_gradient(x), axis=axis, stable=True)
+  """Non-differentiable descending argsort (stable, int32)."""
+  return jnp.argsort(-lax.stop_gradient(x), axis=axis,
+                     stable=True).astype(_INT)
 
 
 def argsort_ascending(x: Array, axis: int = -1) -> Array:
-  return jnp.argsort(lax.stop_gradient(x), axis=axis, stable=True)
+  return jnp.argsort(lax.stop_gradient(x), axis=axis,
+                     stable=True).astype(_INT)
 
 
 def sort_descending(x: Array) -> tuple[Array, Array]:
@@ -39,9 +67,10 @@ def sort_descending(x: Array) -> tuple[Array, Array]:
 
 
 def inverse_permutation(sigma: Array) -> Array:
-  """sigma^{-1} along the last axis."""
+  """sigma^{-1} along the last axis (int32)."""
+  sigma = sigma.astype(_INT)
   n = sigma.shape[-1]
-  iota = jnp.broadcast_to(jnp.arange(n, dtype=sigma.dtype), sigma.shape)
+  iota = jnp.broadcast_to(jnp.arange(n, dtype=_INT), sigma.shape)
   out = jnp.zeros_like(sigma)
   return jnp.put_along_axis(out, sigma, iota, axis=-1, inplace=False)
 
@@ -53,3 +82,134 @@ def apply_inverse_permutation(v: Array, sigma: Array) -> Array:
   """
   out = jnp.zeros_like(v)
   return jnp.put_along_axis(out, sigma, v, axis=-1, inplace=False)
+
+
+# ---------------------------------------------------------------------------
+# Packed single-key sorts (the integer-sort fast path).
+# ---------------------------------------------------------------------------
+
+
+def _packed_sort_u64(hi: Array, lo: Array) -> tuple[Array, Array]:
+  """Ascending sort of the u64 keys (hi << 32) | lo; returns (hi, lo) sorted.
+
+  Packing is a size-changing ``bitcast_convert_type`` of a trailing
+  ``(..., 2)`` u32 axis (little-endian: element 0 is the low word), which
+  avoids 64-bit *constants* entirely: jaxpr constants are re-canonicalized
+  to 32 bits at lowering time when global x64 is off, so a
+  ``jnp.uint64(32)`` shift amount would miscompile even inside an
+  ``enable_x64`` trace scope.
+  """
+  with jax.experimental.enable_x64(True):
+    packed = lax.bitcast_convert_type(jnp.stack([lo, hi], axis=-1),
+                                      jnp.uint64)
+    skeys = lax.sort(packed, dimension=-1, is_stable=False)
+    unpacked = lax.bitcast_convert_type(skeys, jnp.uint32)
+  return unpacked[..., 1], unpacked[..., 0]
+
+
+def _f32_total_order_keys(x: Array, descending: bool) -> Array:
+  """u32 keys whose unsigned order is the total order on f32 bit patterns."""
+  b = lax.bitcast_convert_type(x, jnp.uint32)
+  sign = jnp.uint32(_SIGN_BIT)
+  asc = jnp.where((b & sign) != 0, ~b, b | sign)
+  return ~asc if descending else asc
+
+
+def _keys_to_f32(keys: Array, descending: bool) -> Array:
+  """Invert ``_f32_total_order_keys`` — bit-exact value recovery."""
+  sign = jnp.uint32(_SIGN_BIT)
+  asc = ~keys if descending else keys
+  b = jnp.where((asc & sign) != 0, asc & ~sign, ~asc)
+  return lax.bitcast_convert_type(b, jnp.float32)
+
+
+def _fast_sort_ok(x: Array) -> bool:
+  """Packed u64 path: f32 keys only, and not on TPU (no 64-bit integers)."""
+  return (x.dtype == jnp.float32 and x.ndim >= 1
+          and jax.default_backend() != "tpu")
+
+
+def argsort_descending_fast(x: Array) -> tuple[Array, Array]:
+  """(sorted values, sigma int32) descending along the last axis.
+
+  Single u64 integer sort on f32/CPU/GPU (~4x faster than the comparator
+  argsort at n=1024); falls back to ``sort_descending`` semantics (under
+  ``stop_gradient``) for other dtypes/platforms.  Non-differentiable: both
+  outputs are detached — callers on the fused projection path own their
+  gradients.
+  """
+  x = lax.stop_gradient(x)
+  if not _fast_sort_ok(x):
+    sigma = argsort_descending(x)
+    return jnp.take_along_axis(x, sigma, axis=-1), sigma
+  n = x.shape[-1]
+  keys = _f32_total_order_keys(x, descending=True)
+  iota = jnp.broadcast_to(jnp.arange(n, dtype=jnp.uint32), x.shape)
+  skeys, sigma = _packed_sort_u64(keys, iota)
+  return _keys_to_f32(skeys, descending=True), sigma.astype(_INT)
+
+
+def invert_permutation_fast(sigma: Array) -> Array:
+  """sigma^{-1} (int32) without a scatter: one packed integer sort.
+
+  For n <= 65535 the (position-in-sorted-order, original-index) pair packs
+  into a single u32 key (``sigma * n + iota``); larger n (or TPU, which
+  has no u64) uses the u64 pack / an explicit scatter respectively.
+  """
+  n = sigma.shape[-1]
+  if jax.default_backend() == "tpu" and n > _U32_INVERT_MAX_N:
+    return inverse_permutation(sigma)
+  iota = jnp.broadcast_to(jnp.arange(n, dtype=jnp.uint32), sigma.shape)
+  sig_u = sigma.astype(jnp.uint32)
+  if n <= _U32_INVERT_MAX_N:
+    packed = sig_u * jnp.uint32(n) + iota
+    inv = lax.sort(packed, dimension=-1, is_stable=False) % jnp.uint32(n)
+  else:
+    _, inv = _packed_sort_u64(sig_u, iota)
+  return inv.astype(_INT)
+
+
+# ---------------------------------------------------------------------------
+# Sort reuse across operators.
+# ---------------------------------------------------------------------------
+
+
+class SortContext:
+  """Caches the argsort of one tensor so several operators share one sort.
+
+  Build it once on the raw values and pass it to every soft operator that
+  sees the *same* tensor (``soft_rank`` twice in a Spearman loss, the
+  ``soft_sort``/``soft_quantile`` pair, an eps sweep over identical
+  scores): each direction's (sorted values, sigma, sigma^{-1}) triple is
+  computed on first use and served from cache afterwards, recorded as
+  ``sort_reuse_hit`` in ``repro.obs.metrics``.
+
+  Trace-time caveat: the cache holds *traced* arrays, so a context is only
+  valid within the jit trace (or eager region) whose ``values`` it was
+  built from — build it inside the jitted function, next to the operator
+  calls that share it.
+  """
+
+  def __init__(self, values: Array):
+    self.values = jnp.asarray(values)
+    self._cache: dict[bool, tuple[Array, Array, Array]] = {}
+
+  def _get(self, descending: bool) -> tuple[Array, Array, Array]:
+    hit = descending in self._cache
+    if not hit:
+      x = self.values if descending else -self.values
+      s, sigma = argsort_descending_fast(x)
+      self._cache[descending] = (s if descending else -s, sigma,
+                                 invert_permutation_fast(sigma))
+    from repro.obs import metrics as _metrics  # lazy: keep import light
+    _metrics.counter_inc("sort_reuse_hit" if hit else "sort_reuse_miss",
+                         source="sort_context")
+    return self._cache[descending]
+
+  def descending(self) -> tuple[Array, Array, Array]:
+    """(values sorted descending, sigma, sigma^{-1}), all detached."""
+    return self._get(True)
+
+  def ascending(self) -> tuple[Array, Array, Array]:
+    """(values sorted ascending, sigma, sigma^{-1}), all detached."""
+    return self._get(False)

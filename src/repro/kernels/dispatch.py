@@ -67,9 +67,11 @@ Array = jax.Array
 
 ENV_VAR = "REPRO_BACKEND"
 BWD_ENV_VAR = "REPRO_BACKWARD"
+PROJECTION_ENV_VAR = "REPRO_PROJECTION"
 
 BACKENDS = ("auto", "lax", "scan", "pallas", "minimax")
 BWD_BACKENDS = ("auto", "segscan", "scatter")
+PROJECTION_PATHS = ("auto", "fused", "composed")
 
 # n at or below which the O(n^2) closed form beats the log-depth machines
 # off-TPU (no control flow at all, trivially vectorized; memory is
@@ -295,6 +297,61 @@ def _trace_cache_note(key: tuple) -> None:
   _metrics.counter_inc("dispatch_trace_cache_miss")
 
 
+def resolve_projection(path: str | None = None) -> str:
+  """Resolve a projection-path request: arg > env > default ("fused").
+
+  The projection registry (``("projection", reg, path)`` keys, populated on
+  ``repro.core.projection`` import) holds whole-pipeline implementations:
+  ``"fused"`` — single custom VJP around sort + isotonic solve + gather,
+  packed integer sorts, gather-only backward; ``"composed"`` — the
+  reference chain of four differentiable primitives, kept reachable (env
+  ``REPRO_PROJECTION=composed``) for differential testing.
+  """
+  if path:
+    p, source = path, "arg"
+  else:
+    env = _env_choice(PROJECTION_ENV_VAR, PROJECTION_PATHS)
+    if env:
+      p, source = env, "env"
+    else:
+      p, source = "auto", "default"
+  if p == "auto":
+    p = "fused"
+  if p not in PROJECTION_PATHS:
+    raise ValueError(
+        f"projection path must be one of {PROJECTION_PATHS}, got {p!r}")
+  _metrics.counter_inc("projection_resolve", path=p, source=source)
+  return p
+
+
+def dispatch_projection(z: Array, w: Array, regularization: str,
+                        impl: str | None, path: str | None = None,
+                        **kwargs) -> Array:
+  """Route a permutahedron projection to the fused or composed pipeline.
+
+  Unlike ``dispatch``, implementations here own their batching (the fused
+  path needs the unflattened unbatched-``w`` shape to share one weight
+  sort across the batch), so ``z``/``w`` pass through unflattened;
+  ``kwargs`` carry the static sortedness flags and optional precomputed
+  permutations.  Runs under a ``repro_projection_<reg>_<path>`` named
+  scope; fused calls are counted as ``projection_fused_calls``.
+  """
+  p = resolve_projection(path)
+  fn = _REGISTRY.get(("projection", regularization, p))
+  if fn is None:
+    raise ValueError(
+        f"no projection path {p!r} registered for "
+        f"regularization={regularization!r} (import repro.core.projection); "
+        f"have {registered_backends('projection', regularization)}")
+  if p == "fused":
+    _metrics.counter_inc("projection_fused_calls",
+                         regularization=regularization)
+  _metrics.counter_inc("dispatch_calls", op="projection",
+                       regularization=regularization, backend=p)
+  with _tracing.backend_scope("projection", regularization, p):
+    return fn(z, w, impl, **kwargs)
+
+
 def dispatch(op: str, regularization: str, backend: str | None,
              *args: Array) -> Array:
   """Route a batched forward pass to the resolved backend.
@@ -385,3 +442,17 @@ register_backward("isotonic", "l2", "segscan")(_svjp.isotonic_l2_bwd_segscan)
 register_backward("isotonic", "l2", "scatter")(_svjp.isotonic_l2_bwd_scatter)
 register_backward("isotonic", "kl", "segscan")(_svjp.isotonic_kl_bwd_segscan)
 register_backward("isotonic", "kl", "scatter")(_svjp.isotonic_kl_bwd_scatter)
+
+# Fused-projection backward table: same Lemma 2 segment algebra, consuming
+# the block structure precomputed by the fused forward (residuals) instead
+# of re-deriving it from the solver output.  Forward projection paths
+# ("fused" / "composed") register themselves on ``repro.core.projection``
+# import — kernels must not import core.
+register_backward("projection", "l2",
+                  "segscan")(_svjp.projection_l2_bwd_segscan)
+register_backward("projection", "l2",
+                  "scatter")(_svjp.projection_l2_bwd_scatter)
+register_backward("projection", "kl",
+                  "segscan")(_svjp.projection_kl_bwd_segscan)
+register_backward("projection", "kl",
+                  "scatter")(_svjp.projection_kl_bwd_scatter)

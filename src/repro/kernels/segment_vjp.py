@@ -180,3 +180,54 @@ def isotonic_kl_bwd_scatter(s: Array, w: Array, v: Array,
   grad_s = scatter_softmax(s, bid) * gs
   grad_w = -scatter_softmax(w, bid) * gs
   return grad_s, grad_w
+
+
+# ---------------------------------------------------------------------------
+# Projection backward passes (fused whole-pipeline VJP).
+#
+# Same Lemma 2 algebra as the isotonic VJPs above, but consuming the block
+# structure (start mask + per-position start/end indices) *precomputed by
+# the fused projection forward* and saved as custom-VJP residuals, instead
+# of re-deriving it from the solver output on every backward call.  The
+# ``starts`` mask is carried as the solver dtype (dispatch reshapes every
+# residual through the same (rows, n) contract) and re-read as boolean
+# here.
+# ---------------------------------------------------------------------------
+
+
+def _starts_bool(starts: Array) -> Array:
+  return starts.astype(bool)
+
+
+def projection_l2_bwd_segscan(g: Array, starts: Array, start_idx: Array,
+                              end_idx: Array) -> Array:
+  """Lemma 2 (Q) with precomputed blocks: within-block mean of g."""
+  return seg_mean_bcast(g, _starts_bool(starts), start_idx.astype(_INT),
+                        end_idx.astype(_INT))
+
+
+def projection_l2_bwd_scatter(g: Array, starts: Array, start_idx: Array,
+                              end_idx: Array) -> Array:
+  del start_idx, end_idx
+  bid = jnp.cumsum(_starts_bool(starts).astype(_INT), axis=-1) - 1
+  return scatter_mean_bcast(g, bid)
+
+
+def projection_kl_bwd_segscan(s: Array, w: Array, g: Array, starts: Array,
+                              start_idx: Array,
+                              end_idx: Array) -> tuple[Array, Array]:
+  """Lemma 2 (E) with precomputed blocks: softmax-weighted block sums."""
+  del start_idx
+  sb = _starts_bool(starts)
+  ei = end_idx.astype(_INT)
+  gs = seg_sum_bcast(g, sb, ei)
+  return seg_softmax(s, sb, ei) * gs, -seg_softmax(w, sb, ei) * gs
+
+
+def projection_kl_bwd_scatter(s: Array, w: Array, g: Array, starts: Array,
+                              start_idx: Array,
+                              end_idx: Array) -> tuple[Array, Array]:
+  del start_idx, end_idx
+  bid = jnp.cumsum(_starts_bool(starts).astype(_INT), axis=-1) - 1
+  gs = scatter_sum_bcast(g, bid)
+  return scatter_softmax(s, bid) * gs, -scatter_softmax(w, bid) * gs

@@ -1,0 +1,306 @@
+"""Fused projection pipeline vs the composed reference (ISSUE 8 tentpole).
+
+The ``fused`` path (one custom VJP around sort + isotonic solve + gather)
+must be *indistinguishable* from the ``composed`` chain of differentiable
+primitives — forward values and VJPs — across regularizations, weight
+layouts (already-sorted, unsorted, batched) and tied inputs.  On top of
+the equivalence contract: the exact-regime Lemma 3 guarantee must survive
+the fusion, the fused backward must compile to zero scatters, the
+``REPRO_PROJECTION`` escape hatch must reach the composed path, and the
+observability counters must record what ran.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import hlo
+from repro.core import (
+    SortContext, hard_rank, soft_rank, soft_sort)
+from repro.core.permutations import (
+    argsort_descending_fast, invert_permutation_fast)
+from repro.core.projection import projection_permutahedron
+from repro.kernels import dispatch
+from repro.obs import metrics
+
+rng = np.random.default_rng(7)
+
+
+def _proj_loss(path, reg, z, w, **kwargs):
+  out = projection_permutahedron(z, w, reg, path=path, **kwargs)
+  return jnp.sum(out * jnp.cos(jnp.arange(out.size).reshape(out.shape)))
+
+
+def _assert_paths_match(reg, z, w, **kwargs):
+  """Forward values and (z, w) gradients agree between the two paths."""
+  out_f = projection_permutahedron(z, w, reg, path="fused", **kwargs)
+  out_c = projection_permutahedron(z, w, reg, path="composed", **kwargs)
+  np.testing.assert_allclose(out_f, out_c, rtol=1e-5, atol=1e-5)
+  gf = jax.grad(functools.partial(_proj_loss, "fused", reg, **kwargs),
+                argnums=(0, 1))(z, w)
+  gc = jax.grad(functools.partial(_proj_loss, "composed", reg, **kwargs),
+                argnums=(0, 1))(z, w)
+  for a, b in zip(gf, gc):
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic equivalence sweep (always runs, hypothesis or not)
+# ---------------------------------------------------------------------------
+
+# Values quantized to a 0.5 grid so ties are common — tie handling is
+# exactly where a fused re-derivation of block structure could diverge
+# from the composed chain.
+
+
+def _tied(shape, seed):
+  local = np.random.default_rng(seed)
+  return jnp.array(
+      (local.integers(-10, 11, size=shape) / 2).astype(np.float32))
+
+
+@pytest.mark.parametrize("reg", ["l2", "kl"])
+@pytest.mark.parametrize("w_mode", ["unsorted", "sorted", "batched"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_fused_matches_composed(reg, w_mode, seed):
+  n = 4 + 3 * seed
+  kwargs = {}
+  if w_mode == "batched":
+    z = _tied((3, n), seed)
+    w = _tied((3, n), seed + 100)
+  else:
+    z = _tied((n,), seed)
+    if w_mode == "sorted":
+      w = jnp.arange(n, 0, -1, dtype=jnp.float32)
+      kwargs["w_is_sorted"] = True
+    else:
+      w = _tied((n,), seed + 100)
+  if reg == "kl" and w_mode != "sorted":
+    w = w / 4.0  # keep exp(w) well-conditioned in f32
+  _assert_paths_match(reg, z, w, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Property-based equivalence (hypothesis, when available)
+# ---------------------------------------------------------------------------
+
+try:
+  from hypothesis import given, settings, strategies as st
+  _HAS_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - dev extra not installed
+  _HAS_HYPOTHESIS = False
+
+if _HAS_HYPOTHESIS:
+  SETTINGS = dict(max_examples=25, deadline=None)
+
+  tied_floats = st.integers(min_value=-10, max_value=10).map(
+      lambda i: i / 2)
+  vectors = st.lists(tied_floats, min_size=2, max_size=12)
+
+  @given(vectors, vectors, st.sampled_from(["l2", "kl"]))
+  @settings(**SETTINGS)
+  def test_fused_matches_composed_unsorted_w(zv, wv, reg):
+    n = min(len(zv), len(wv))
+    z = jnp.array(np.asarray(zv[:n], np.float32))
+    w = jnp.array(np.asarray(wv[:n], np.float32))
+    if reg == "kl":
+      w = w / 4.0
+    _assert_paths_match(reg, z, w)
+
+  @given(vectors, st.sampled_from(["l2", "kl"]))
+  @settings(**SETTINGS)
+  def test_fused_matches_composed_sorted_w(zv, reg):
+    """w pre-sorted with the w_is_sorted guarantee (soft_rank's case)."""
+    n = len(zv)
+    z = jnp.array(np.asarray(zv, np.float32))
+    w = jnp.arange(n, 0, -1, dtype=jnp.float32)
+    _assert_paths_match(reg, z, w, w_is_sorted=True)
+
+  @given(vectors, vectors, st.sampled_from(["l2", "kl"]))
+  @settings(**SETTINGS)
+  def test_fused_matches_composed_batched_w(zv, wv, reg):
+    """Per-row weights: w carries the same batch shape as z."""
+    n = min(len(zv), len(wv))
+    z = jnp.stack([jnp.array(np.asarray(zv[:n], np.float32)),
+                   jnp.array(np.asarray(zv[:n], np.float32)) * 0.5])
+    w = jnp.stack([jnp.array(np.asarray(wv[:n], np.float32)),
+                   jnp.array(np.asarray(wv[:n], np.float32))[::-1]])
+    if reg == "kl":
+      w = w / 4.0
+    _assert_paths_match(reg, z, w)
+
+
+# ---------------------------------------------------------------------------
+# Exact regime (Lemma 3) survives the fusion
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("reg", ["l2", "kl"])
+def test_exact_regime_through_fused_path(reg):
+  from repro.core import eps_min
+  assert dispatch.resolve_projection(None) == "fused"
+  n = 7
+  local = np.random.default_rng(3)
+  theta = jnp.array(local.normal(size=n).astype(np.float32)) * 2
+  rho = jnp.arange(n, 0, -1).astype(jnp.float32)
+  s_sorted = jnp.flip(jnp.sort(-theta))
+  eps = float(eps_min(s_sorted, rho)) * 0.5
+  ranks = soft_rank(theta, eps, reg)
+  np.testing.assert_allclose(ranks, hard_rank(theta, "DESCENDING"),
+                             atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Zero scatters in the fused backward's compiled HLO
+# ---------------------------------------------------------------------------
+
+
+def _opcode_count(text: str, opcode: str) -> int:
+  return sum(1 for instrs in hlo.parse_computations(text).values()
+             for i in instrs if i.opcode == opcode)
+
+
+@pytest.mark.parametrize("reg", ["l2", "kl"])
+def test_fused_backward_compiles_to_zero_scatters(reg):
+  theta = jnp.array(rng.normal(size=(2, 32)).astype(np.float32))
+
+  def f(t):
+    return soft_rank(t, 0.1, reg, impl="scan")
+
+  out, vjp = jax.vjp(f, theta)
+  text = jax.jit(vjp).lower(out).compile().as_text()
+  assert _opcode_count(text, "scatter") == 0, (
+      "fused projection backward must be gather-only")
+
+
+def test_fused_forward_compiles_to_zero_scatters():
+  theta = jnp.array(rng.normal(size=(2, 32)).astype(np.float32))
+  text = (jax.jit(lambda t: soft_rank(t, 0.1, "l2", impl="scan"))
+          .lower(theta).compile().as_text())
+  assert _opcode_count(text, "scatter") == 0
+
+
+# ---------------------------------------------------------------------------
+# Path selection: env escape hatch + precedence
+# ---------------------------------------------------------------------------
+
+
+def test_env_selects_composed(monkeypatch):
+  monkeypatch.setenv(dispatch.PROJECTION_ENV_VAR, "composed")
+  assert dispatch.resolve_projection(None) == "composed"
+  # Explicit argument still wins over the environment.
+  assert dispatch.resolve_projection("fused") == "fused"
+  # And the composed path actually serves calls under the env override.
+  theta = jnp.array(rng.normal(size=(3, 9)).astype(np.float32))
+  r_env = soft_rank(theta, 0.5, "l2")
+  monkeypatch.delenv(dispatch.PROJECTION_ENV_VAR)
+  np.testing.assert_allclose(r_env, soft_rank(theta, 0.5, "l2"),
+                             rtol=1e-5, atol=1e-5)
+
+
+def test_env_rejects_unknown_path(monkeypatch):
+  monkeypatch.setenv(dispatch.PROJECTION_ENV_VAR, "warp")
+  with pytest.raises(ValueError, match="warp"):
+    dispatch.resolve_projection(None)
+
+
+# ---------------------------------------------------------------------------
+# Observability: counters record what ran
+# ---------------------------------------------------------------------------
+
+
+def test_fused_calls_counter_increments():
+  metrics.set_enabled(True)
+  metrics.reset()
+  try:
+    theta = jnp.array(rng.normal(size=(2, 8)).astype(np.float32))
+    soft_rank(theta, 0.5, "l2")
+    assert metrics.counter_value("projection_fused_calls",
+                                 regularization="l2") >= 1
+  finally:
+    metrics.set_enabled(None)
+    metrics.reset()
+
+
+def test_sort_context_reuse_counter():
+  metrics.set_enabled(True)
+  metrics.reset()
+  try:
+    theta = jnp.array(rng.normal(size=(2, 8)).astype(np.float32))
+    ctx = SortContext(theta)
+    r1 = soft_rank(theta, 0.5, "l2", sort_context=ctx)
+    r2 = soft_rank(theta, 0.1, "l2", sort_context=ctx)
+    assert metrics.counter_value("sort_reuse_miss",
+                                 source="sort_context") == 1
+    assert metrics.counter_value("sort_reuse_hit",
+                                 source="sort_context") >= 1
+    # The reused permutation must agree with a context-free call.
+    np.testing.assert_allclose(r1, soft_rank(theta, 0.5, "l2"),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(r2, soft_rank(theta, 0.1, "l2"),
+                               rtol=1e-5, atol=1e-5)
+  finally:
+    metrics.set_enabled(None)
+    metrics.reset()
+
+
+def test_unbatched_w_cache_counter():
+  metrics.set_enabled(True)
+  metrics.reset()
+  try:
+    z = jnp.array(rng.normal(size=(4, 8)).astype(np.float32))
+    w = jnp.array(rng.normal(size=8).astype(np.float32))
+    projection_permutahedron(z, w, "l2")
+    projection_permutahedron(z * 2, w, "l2")  # same eager concrete w
+    assert metrics.counter_value("sort_reuse_hit", source="w_cache") >= 1
+  finally:
+    metrics.set_enabled(None)
+    metrics.reset()
+
+
+# ---------------------------------------------------------------------------
+# SortContext equivalence including gradients
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("direction", ["ASCENDING", "DESCENDING"])
+def test_sort_context_matches_plain_calls(direction):
+  theta = jnp.array(rng.normal(size=(3, 10)).astype(np.float32))
+
+  def with_ctx(t):
+    ctx = SortContext(t)
+    return (jnp.sum(soft_rank(t, 0.7, "l2", direction,
+                              sort_context=ctx) ** 2)
+            + jnp.sum(soft_sort(t, 0.7, "l2", direction,
+                                sort_context=ctx) ** 2))
+
+  def without_ctx(t):
+    return (jnp.sum(soft_rank(t, 0.7, "l2", direction) ** 2)
+            + jnp.sum(soft_sort(t, 0.7, "l2", direction) ** 2))
+
+  np.testing.assert_allclose(with_ctx(theta), without_ctx(theta),
+                             rtol=1e-5, atol=1e-5)
+  np.testing.assert_allclose(jax.grad(with_ctx)(theta),
+                             jax.grad(without_ctx)(theta),
+                             rtol=1e-4, atol=1e-5)
+  # Also under jit, where the context must be built inside the trace.
+  np.testing.assert_allclose(jax.jit(with_ctx)(theta), without_ctx(theta),
+                             rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# int32 permutation plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_fast_sort_helpers_return_int32():
+  x = jnp.array(rng.normal(size=(3, 17)).astype(np.float32))
+  s, sigma = argsort_descending_fast(x)
+  assert sigma.dtype == jnp.int32
+  assert invert_permutation_fast(sigma).dtype == jnp.int32
+  np.testing.assert_array_equal(
+      np.take_along_axis(np.asarray(x), np.asarray(sigma), axis=-1),
+      np.asarray(s))

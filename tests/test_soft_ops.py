@@ -147,3 +147,26 @@ def test_gradients_match_fd_all_ops():
         (fn(theta.at[i].add(eps)) - fn(theta.at[i].add(-eps))) / (2 * eps)
         for i in range(6)])
     np.testing.assert_allclose(g, fd, atol=2e-2)
+
+
+def test_permutation_indices_are_int32():
+  """All permutation plumbing is pinned to int32 (ISSUE 8 satellite).
+
+  int64 indices double gather/scatter bandwidth for nothing at the sizes
+  this repo targets; the fused projection residuals assume int32, so the
+  hard-sort primitives must never silently widen.
+  """
+  from repro.core.permutations import (
+      argsort_ascending, argsort_descending, inverse_permutation,
+      sort_descending)
+  x = jnp.array(rng.normal(size=(2, 11)).astype(np.float32))
+  sigma_d = argsort_descending(x)
+  sigma_a = argsort_ascending(x)
+  assert sigma_d.dtype == jnp.int32
+  assert sigma_a.dtype == jnp.int32
+  assert inverse_permutation(sigma_d).dtype == jnp.int32
+  s, sigma = sort_descending(x)
+  assert sigma.dtype == jnp.int32
+  np.testing.assert_array_equal(
+      np.take_along_axis(np.asarray(x), np.asarray(sigma), axis=-1),
+      np.asarray(s))

@@ -2,14 +2,16 @@
 """Backend-registry gate: docs coverage + bench-artifact completeness.
 
   PYTHONPATH=src python tools/check_backends.py [--bench BENCH_runtime.json]
+      [--bench-projection BENCH_projection.json]
 
-Two checks (the first always runs, the second only with ``--bench``):
+Three checks (the first always runs, the others only with their flag):
 
 1. **Docs coverage** — every backend key registered in
-   ``repro.kernels.dispatch`` (forward AND backward registries, plus the
-   ``auto`` aliases) must appear as an inline-code token in the README
-   backend table and in ``docs/ARCHITECTURE.md``, so a new backend cannot
-   ship undocumented and the docs cannot keep advertising a deleted one
+   ``repro.kernels.dispatch`` (forward AND backward registries, the
+   projection-path registry, plus the ``auto`` aliases) must appear as an
+   inline-code token in the README backend table and in
+   ``docs/ARCHITECTURE.md``, so a new backend cannot ship undocumented and
+   the docs cannot keep advertising a deleted one
    (documented-but-unregistered names fail too).
 
 2. **Bench completeness** — the given ``BENCH_runtime.json`` must contain,
@@ -17,6 +19,14 @@ Two checks (the first always runs, the second only with ``--bench``):
    at least one result row that actually ran (a finite ``*_us`` timing
    field — a row that was skipped everywhere does not count), so the CI
    perf trajectory can never silently lose a backend.
+
+3. **Projection bench + regression guard** — the given
+   ``BENCH_projection.json`` must contain a finite-timing row per
+   registered projection path (``fused`` / ``composed``) and
+   regularization, AND in every cell where both paths ran in the same
+   artifact the fused e2e fwd+bwd time must not exceed the composed one:
+   the fused pipeline being slower than the reference chain it replaces is
+   a regression by definition and fails the build.
 
 Exit status 0 = clean; 1 = problems (each printed on stderr).
 """
@@ -36,7 +46,11 @@ DOC_FILES = ("README.md", os.path.join("docs", "ARCHITECTURE.md"))
 _CODE_TOKEN_RE = re.compile(r"`\"?([a-z_]+)\"?`")
 
 
-def _registered() -> tuple[set[str], set[str]]:
+def _registered() -> tuple[set[str], set[str], set[str]]:
+  # Importing repro.core.projection populates the ("projection", reg, path)
+  # rows of the forward registry — kernels.dispatch alone only carries the
+  # isotonic backends plus the projection *backward* table.
+  import repro.core.projection  # noqa: F401
   from repro.kernels import dispatch as D
   fwd = set()
   for reg in ("l2", "kl"):
@@ -44,17 +58,20 @@ def _registered() -> tuple[set[str], set[str]]:
   bwd = set()
   for reg in ("l2", "kl"):
     bwd |= set(D.registered_backward_backends("isotonic", reg))
-  return fwd, bwd
+  proj = set()
+  for reg in ("l2", "kl"):
+    proj |= set(D.registered_backends("projection", reg))
+  return fwd, bwd, proj
 
 
 def check_docs_coverage() -> list[str]:
   from repro.kernels import dispatch as D
   problems = []
-  fwd, bwd = _registered()
+  fwd, bwd, proj = _registered()
   # "auto" is a registered alias in both selection chains even though it
   # never appears as a registry key.
-  want = fwd | bwd | {"auto"}
-  known = set(D.BACKENDS) | set(D.BWD_BACKENDS)
+  want = fwd | bwd | proj | {"auto"}
+  known = set(D.BACKENDS) | set(D.BWD_BACKENDS) | set(D.PROJECTION_PATHS)
   for rel in DOC_FILES:
     path = os.path.join(REPO_ROOT, rel)
     with open(path, encoding="utf-8") as f:
@@ -80,7 +97,7 @@ def check_bench_artifact(path: str) -> list[str]:
   with open(path, encoding="utf-8") as f:
     payload = json.load(f)
   results = payload.get("results", [])
-  fwd, _ = _registered()
+  fwd, _, _ = _registered()
   for backend in sorted(fwd):
     for reg in ("l2", "kl"):
       rows = [r for r in results
@@ -101,19 +118,77 @@ def check_bench_artifact(path: str) -> list[str]:
   return problems
 
 
+def _finite_timing(rec: dict) -> bool:
+  return any(k.endswith("_us") and isinstance(rec[k], (int, float))
+             for k in rec)
+
+
+def check_projection_artifact(path: str) -> list[str]:
+  """Projection-path completeness + fused-vs-composed regression guard."""
+  problems = []
+  if not os.path.exists(path):
+    return [f"{path}: artifact not found"]
+  with open(path, encoding="utf-8") as f:
+    payload = json.load(f)
+  results = payload.get("results", [])
+  _, _, proj = _registered()
+  for reg in ("l2", "kl"):
+    # Per-path coverage: every registered projection path must have run.
+    for p in sorted(proj):
+      rows = [r for r in results
+              if r.get("backend") == p and r.get("regularization") == reg
+              and _finite_timing(r)]
+      if not rows:
+        problems.append(f"{path}: no ran results for projection path "
+                        f"{p!r} regularization={reg!r}")
+    # Regression guard: wherever both paths ran at the same (n, batch) in
+    # this artifact, fused must not be slower on e2e fwd+bwd — the fused
+    # pipeline exists solely to beat the composed chain it replaces.
+    cells: dict[tuple, dict[str, dict]] = {}
+    for r in results:
+      if (r.get("regularization") == reg and _finite_timing(r)
+          and r.get("backend") in ("fused", "composed")):
+        cells.setdefault((r.get("n"), r.get("batch")),
+                         {})[r["backend"]] = r
+    for (n, batch), by_path in sorted(cells.items(), key=str):
+      fused, composed = by_path.get("fused"), by_path.get("composed")
+      if not (fused and composed):
+        continue
+      f_us = fused.get("e2e_fwd_bwd_us")
+      c_us = composed.get("e2e_fwd_bwd_us")
+      if not isinstance(f_us, (int, float)) or not isinstance(
+          c_us, (int, float)):
+        problems.append(f"{path}: projection cell reg={reg!r} n={n} "
+                        f"b={batch} is missing 'e2e_fwd_bwd_us'")
+        continue
+      if f_us > c_us:
+        problems.append(
+            f"{path}: projection regression — fused e2e fwd+bwd "
+            f"({f_us:.1f}us) slower than composed ({c_us:.1f}us) at "
+            f"reg={reg!r} n={n} b={batch}")
+  return problems
+
+
 def main(argv: list[str]) -> int:
   ap = argparse.ArgumentParser()
   ap.add_argument("--bench", default=None,
                   help="also assert BENCH_runtime.json covers every "
                        "registered backend with a real timing")
+  ap.add_argument("--bench-projection", default=None,
+                  help="also assert BENCH_projection.json covers every "
+                       "projection path and that fused is not slower than "
+                       "composed in the same run")
   args = ap.parse_args(argv)
 
   problems = check_docs_coverage()
   if args.bench:
     problems += check_bench_artifact(args.bench)
+  if args.bench_projection:
+    problems += check_projection_artifact(args.bench_projection)
   for p in problems:
     print(p, file=sys.stderr)
-  checked = "docs" + (f" + {args.bench}" if args.bench else "")
+  checked = "docs" + (f" + {args.bench}" if args.bench else "") + (
+      f" + {args.bench_projection}" if args.bench_projection else "")
   print(f"check_backends: {checked}, {len(problems)} problems")
   return 1 if problems else 0
 
