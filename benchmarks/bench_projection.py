@@ -28,6 +28,7 @@ import numpy as np
 from benchmarks.common import emit, time_fn
 from repro.core import soft_rank
 from repro.core.isotonic import isotonic_kl, isotonic_l2
+from repro import plan as plan_mod
 from repro.kernels import dispatch as dispatch_mod
 from repro.obs import artifacts as obs_artifacts
 
@@ -120,7 +121,8 @@ def run(smoke: bool = False,
 
   meta = obs_artifacts.collect_meta(
       smoke=smoke, suite="projection", batch=BATCH, impl=IMPL,
-      default_path=dispatch_mod.resolve_projection(None))
+      default_path=dispatch_mod.resolve_projection(None),
+      **plan_mod.plan_provenance())
   return obs_artifacts.write_bench_artifact(out_path, results, meta)
 
 

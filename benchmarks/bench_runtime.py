@@ -32,6 +32,7 @@ from benchmarks.common import emit, time_fn
 from repro.core import soft_rank
 from repro.core.baselines import allpairs_rank, ot_rank
 from repro.core.isotonic import isotonic_kl, isotonic_l2
+from repro import plan as plan_mod
 from repro.kernels import dispatch as dispatch_mod
 from repro.obs import artifacts as obs_artifacts
 
@@ -175,6 +176,7 @@ def run_backend_sweep(smoke: bool = False,
       auto_resolves_to=dispatch_mod.resolve_backend(
           "isotonic", "l2", None, shape=(max(batches), max(ns)),
           platform=platform),
+      **plan_mod.plan_provenance(),
   )
   return obs_artifacts.write_bench_artifact(out_path, results, meta)
 
@@ -252,7 +254,7 @@ def run_depth_curve(smoke: bool = False,
 
   meta = obs_artifacts.collect_meta(
       smoke=smoke, suite="depth_curve", platform_note=platform,
-      batch=DEPTH_BATCH)
+      batch=DEPTH_BATCH, **plan_mod.plan_provenance())
   return obs_artifacts.write_bench_artifact(out_path, results, meta)
 
 

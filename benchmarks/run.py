@@ -44,6 +44,7 @@ from benchmarks import (
     bench_topk,
     common,
 )
+from repro import plan as plan_mod
 from repro.obs import artifacts as obs_artifacts
 from repro.obs import metrics as obs_metrics
 
@@ -93,7 +94,8 @@ def main() -> None:
     obs_artifacts.write_bench_artifact(
         "BENCH_figures.json", results,
         obs_artifacts.collect_meta(suite="figures", smoke=False,
-                                   only=args.only or "all"))
+                                   only=args.only or "all",
+                                   **plan_mod.plan_provenance()))
   if failed:
     print(f"FAILED: {failed}", file=sys.stderr)
     raise SystemExit(1)

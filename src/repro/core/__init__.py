@@ -30,9 +30,21 @@ from repro.core.operators import (
 )
 from repro.core.permutations import SortContext
 from repro.core.projection import projection_permutahedron
+from repro.plan import (
+    ExecutionPlan,
+    PlanRule,
+    load_plan,
+    set_active_plan,
+    use_plan,
+)
 
 __all__ = [
     "SortContext",
+    "ExecutionPlan",
+    "PlanRule",
+    "load_plan",
+    "set_active_plan",
+    "use_plan",
     "isotonic_kl",
     "isotonic_l2",
     "set_default_impl",

@@ -16,7 +16,13 @@ batch dimensions and make exactly one dispatch call per forward pass
 a registered backend — ``"lax"`` (reference ``lax.fori_loop`` stack machine,
 natively batched), ``"scan"`` (log-depth divide-and-conquer PAV),
 ``"pallas"`` (tiled TPU kernel), or ``"minimax"`` (O(n^2) closed form for
-small n / SPMD) — with ``"auto"`` resolving by platform and shape.
+small n / SPMD).  Backend choice follows the unified precedence chain
+(explicit ``impl=`` > ``REPRO_BACKEND`` > execution plan — see
+``repro.plan``); an :class:`~repro.plan.ExecutionPlan` can be pinned
+per-call via ``plan=`` (it rides the custom_vjp as a static argument, so
+it survives jit, unlike trace-time context managers).  The dtype contract
+(bf16/f16 promoted to f32 for the solve, demoted on return) is enforced
+centrally in dispatch — uniformly for every backend.
 
 The backward pass is exact and O(n) for every forward backend (Lemma 2):
 the Jacobian is block-diagonal with rank-1 blocks, recovered from runs of
@@ -45,74 +51,67 @@ Array = jax.Array
 # ---------------------------------------------------------------------------
 
 
-def _dispatch(regularization: str, impl: str | None, *args: Array) -> Array:
+def _dispatch(regularization: str, impl: str | None, plan,
+              *args: Array) -> Array:
   from repro.kernels import dispatch as _d  # lazy: keep core import light
-  return _d.dispatch("isotonic", regularization, impl, *args)
+  return _d.dispatch("isotonic", regularization, impl, *args, plan=plan)
 
 
-def _dispatch_bwd(regularization: str, *args: Array):
+def _dispatch_bwd(regularization: str, plan, *args: Array):
   from repro.kernels import dispatch as _d  # lazy: keep core import light
-  return _d.dispatch_backward("isotonic", regularization, None, *args)
+  return _d.dispatch_backward("isotonic", regularization, None, *args,
+                              plan=plan)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
-def isotonic_l2(y: Array, impl: str | None = None) -> Array:
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def isotonic_l2(y: Array, impl: str | None = None, plan=None) -> Array:
   """Isotonic regression: argmin ||v - y||^2, v non-increasing (last axis).
 
-  ``impl`` must be passed EXPLICITLY by callers that need a specific backend
-  under jit/grad: custom_vjp fwd rules are traced lazily (after any
-  trace-time context manager has exited), so ``use_impl`` only affects
-  eager/top-level calls.
+  ``impl`` / ``plan`` must be passed EXPLICITLY by callers that need a
+  specific backend under jit/grad: custom_vjp fwd rules are traced lazily
+  (after any trace-time context manager has exited), so ``use_impl`` /
+  ``use_plan`` only affect eager/top-level calls.
   """
-  return _isotonic_l2_impl(y, impl)
+  return _dispatch("l2", impl, plan, y)
 
 
-def _isotonic_l2_impl(y: Array, impl: str | None = None) -> Array:
-  dtype = y.dtype
-  y32 = y.astype(jnp.float32) if dtype in (jnp.bfloat16, jnp.float16) else y
-  return _dispatch("l2", impl, y32).astype(dtype)
-
-
-def _isotonic_l2_fwd(y, impl):
-  v = _isotonic_l2_impl(y, impl)
+def _isotonic_l2_fwd(y, impl, plan):
+  v = _dispatch("l2", impl, plan, y)
   return v, v
 
 
-def _isotonic_l2_bwd(impl, v, g):
+def _isotonic_l2_bwd(impl, plan, v, g):
   # Lemma 2 (Q): dv/dy is block-diagonal with blocks 11^T/|B| (symmetric).
-  return (_dispatch_bwd("l2", v, g),)
+  return (_dispatch_bwd("l2", plan, v, g),)
 
 
 isotonic_l2.defvjp(_isotonic_l2_fwd, _isotonic_l2_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
-def isotonic_kl(s: Array, w: Array, impl: str | None = None) -> Array:
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def isotonic_kl(s: Array, w: Array, impl: str | None = None,
+                plan=None) -> Array:
   """Entropic-regularization isotonic optimization (paper Eq. 8), last axis."""
-  return _isotonic_kl_impl(s, w, impl)
+  return _isotonic_kl_impl(s, w, impl, plan)
 
 
-def _isotonic_kl_impl(s: Array, w: Array, impl: str | None = None) -> Array:
-  dtype = s.dtype
-  if dtype in (jnp.bfloat16, jnp.float16):
-    s = s.astype(jnp.float32)
-    w = w.astype(jnp.float32)
+def _isotonic_kl_impl(s: Array, w: Array, impl: str | None, plan) -> Array:
   w = jnp.broadcast_to(w, s.shape)
-  return _dispatch("kl", impl, s, w).astype(dtype)
+  return _dispatch("kl", impl, plan, s, w)
 
 
-def _isotonic_kl_fwd(s, w, impl):
-  v = _isotonic_kl_impl(s, w, impl)
+def _isotonic_kl_fwd(s, w, impl, plan):
+  v = _isotonic_kl_impl(s, w, impl, plan)
   return v, (s, w, v)
 
 
-def _isotonic_kl_bwd(impl, res, g):
+def _isotonic_kl_bwd(impl, plan, res, g):
   s, w, v = res
   w_b = jnp.broadcast_to(w, s.shape)
 
   # Lemma 2 (E): B_j = 1 (x) softmax(s_B); transpose-multiply:
   #   grad_s = softmax(s_B) * sum(g_B);  grad_w = -softmax(w_B) * sum(g_B).
-  grad_s, grad_w = _dispatch_bwd("kl", s, w_b, v, g)
+  grad_s, grad_w = _dispatch_bwd("kl", plan, s, w_b, v, g)
   # Un-broadcast w gradient if w was unbatched.
   if w.shape != s.shape:
     grad_w = jnp.sum(

@@ -28,6 +28,7 @@ def soft_spearman_loss(
     regularization_strength: float = 1.0,
     regularization: str = "l2",
     direction: str = "ASCENDING",
+    plan=None,
     sort_context: SortContext | None = None,
 ) -> Array:
   """1/2 ||target_ranks - r_eps(theta)||^2, averaged over batch.
@@ -40,7 +41,7 @@ def soft_spearman_loss(
   argsort.
   """
   r = soft_rank(theta, regularization_strength, regularization, direction,
-                sort_context=sort_context)
+                plan=plan, sort_context=sort_context)
   per_example = 0.5 * jnp.sum((r - target_ranks) ** 2, axis=-1)
   return jnp.mean(per_example)
 
@@ -80,6 +81,7 @@ def soft_topk_loss(
     regularization_strength: float = 1.0,
     regularization: str = "l2",
     squash: bool = True,
+    plan=None,
 ) -> Array:
   """Loss encouraging the true label to appear in the soft top-k.
 
@@ -90,7 +92,7 @@ def soft_topk_loss(
   if squash:
     theta = jax.nn.sigmoid(theta)
   r = soft_rank(theta, regularization_strength, regularization,
-                direction="DESCENDING")
+                direction="DESCENDING", plan=plan)
   r_true = jnp.take_along_axis(r, labels[..., None], axis=-1)[..., 0]
   return jnp.mean(jax.nn.relu(r_true - k))
 
@@ -110,6 +112,7 @@ def soft_lts_loss(
     trim_count: int,
     regularization_strength: float = 1.0,
     regularization: str = "l2",
+    plan=None,
     sort_context: SortContext | None = None,
 ) -> Array:
   """Mean of the soft-sorted losses with the largest `trim_count` dropped.
@@ -123,7 +126,8 @@ def soft_lts_loss(
   """
   n = losses.shape[-1]
   s = soft_sort(losses, regularization_strength, regularization,
-                direction="DESCENDING", sort_context=sort_context)
+                direction="DESCENDING", plan=plan,
+                sort_context=sort_context)
   kept = s[..., trim_count:]
   return jnp.sum(kept, axis=-1) / (n - trim_count)
 
@@ -133,6 +137,7 @@ def soft_trimmed_token_loss(
     trim_fraction: float,
     regularization_strength: float = 1.0,
     regularization: str = "l2",
+    plan=None,
 ) -> Array:
   """Soft-LTS applied to a flat vector of per-token LM losses.
 
@@ -144,4 +149,5 @@ def soft_trimmed_token_loss(
   if k == 0:
     return jnp.mean(flat)
   return jnp.mean(
-      soft_lts_loss(flat, k, regularization_strength, regularization))
+      soft_lts_loss(flat, k, regularization_strength, regularization,
+                    plan=plan))

@@ -43,6 +43,7 @@ def soft_sort(
     regularization: str = "l2",
     direction: str = "DESCENDING",
     impl: str | None = None,
+    plan=None,
     sort_context: SortContext | None = None,
 ) -> Array:
   """Soft sort: s_{eps*Psi}(theta) = P_Psi(rho/eps, theta) (paper Eq. 5).
@@ -63,8 +64,11 @@ def soft_sort(
       "DESCENDING" (paper primitive) returns values softly sorted from
       largest to smallest; "ASCENDING" is -soft_sort(-values).
   impl : {"auto", "lax", "scan", "pallas", "minimax"} or None
-      Isotonic backend; None defers to the dispatch default
+      Isotonic backend; None defers to the unified precedence chain
       (``repro.kernels.dispatch``). Pass explicitly under jit/grad.
+  plan : repro.plan.ExecutionPlan or None
+      Pin an execution plan for all of this call's dispatch decisions;
+      rides the custom VJP as a static argument, so it survives jit.
   sort_context : SortContext or None
       A ``SortContext`` built on ``values``; supplies the argsort
       permutation so several operators over the same tensor share one
@@ -95,7 +99,7 @@ def soft_sort(
   w = values if descending else -values
   z = jnp.broadcast_to(_rho(n, values.dtype) / eps, values.shape)
   out = projection_permutahedron(
-      z, w, regularization, impl, z_is_sorted=True,
+      z, w, regularization, impl, plan=plan, z_is_sorted=True,
       w_perm=_ctx_perm(sort_context, descending=descending))
   return out if descending else -out
 
@@ -106,6 +110,7 @@ def soft_rank(
     regularization: str = "l2",
     direction: str = "DESCENDING",
     impl: str | None = None,
+    plan=None,
     sort_context: SortContext | None = None,
 ) -> Array:
   """Soft rank: r_{eps*Psi}(theta) = P_Psi(-theta/eps, rho) (paper Eq. 6).
@@ -126,6 +131,9 @@ def soft_rank(
   impl : {"auto", "lax", "scan", "pallas", "minimax"} or None
       Isotonic backend; see ``repro.kernels.dispatch``. Pass explicitly
       under jit/grad.
+  plan : repro.plan.ExecutionPlan or None
+      Pin an execution plan for all of this call's dispatch decisions;
+      rides the custom VJP as a static argument, so it survives jit.
   sort_context : SortContext or None
       A ``SortContext`` built on ``values``; supplies the argsort
       permutation so several operators over the same tensor share one
@@ -155,7 +163,7 @@ def soft_rank(
   z = (-values if descending else values) / eps
   w = _rho(n, values.dtype)
   return projection_permutahedron(
-      z, w, regularization, impl, w_is_sorted=True,
+      z, w, regularization, impl, plan=plan, w_is_sorted=True,
       z_perm=_ctx_perm(sort_context, descending=not descending))
 
 
@@ -163,6 +171,7 @@ def soft_rank_kl_direct(
     values: Array, regularization_strength: float = 1.0,
     direction: str = "DESCENDING",
     impl: str | None = None,
+    plan=None,
     sort_context: SortContext | None = None) -> Array:
   """Appendix variant r~_E: KL projection directly onto P(rho), not P(e^rho).
 
@@ -179,6 +188,8 @@ def soft_rank_kl_direct(
       "ASCENDING" is the descending variant of -theta.
   impl : {"auto", "lax", "scan", "pallas", "minimax"} or None
       Isotonic backend (``repro.kernels.dispatch``).
+  plan : repro.plan.ExecutionPlan or None
+      Pin an execution plan for all of this call's dispatch decisions.
   sort_context : SortContext or None
       A ``SortContext`` built on ``values`` (shares the argsort with
       other operators over the same tensor; trace-local under jit).
@@ -204,7 +215,7 @@ def soft_rank_kl_direct(
   z = (-values if descending else values) / eps
   w = jnp.log(_rho(n, values.dtype))
   return jnp.exp(projection_permutahedron(
-      z, w, "kl", impl, w_is_sorted=True,
+      z, w, "kl", impl, plan=plan, w_is_sorted=True,
       z_perm=_ctx_perm(sort_context, descending=not descending)))
 
 
@@ -214,6 +225,7 @@ def soft_topk_mask(
     regularization_strength: float = 1.0,
     regularization: str = "l2",
     impl: str | None = None,
+    plan=None,
     sort_context: SortContext | None = None,
 ) -> Array:
   """Differentiable top-k indicator in [0, 1]^n summing to k.
@@ -235,6 +247,8 @@ def soft_topk_mask(
       Psi for the projection.
   impl : {"auto", "lax", "scan", "pallas", "minimax"} or None
       Isotonic backend (``repro.kernels.dispatch``).
+  plan : repro.plan.ExecutionPlan or None
+      Pin an execution plan for all of this call's dispatch decisions.
 
   Returns
   -------
@@ -258,7 +272,7 @@ def soft_topk_mask(
       jnp.zeros((n - k,), values.dtype),
   ])
   return projection_permutahedron(
-      values / eps, w, regularization, impl, w_is_sorted=True,
+      values / eps, w, regularization, impl, plan=plan, w_is_sorted=True,
       z_perm=_ctx_perm(sort_context, descending=True))
 
 
@@ -268,6 +282,7 @@ def soft_quantile(
     regularization_strength: float = 0.1,
     regularization: str = "l2",
     impl: str | None = None,
+    plan=None,
     sort_context: SortContext | None = None,
 ) -> Array:
   """Differentiable q-quantile via the soft sort (ascending).
@@ -285,6 +300,8 @@ def soft_quantile(
       Psi for the projection.
   impl : {"auto", "lax", "scan", "pallas", "minimax"} or None
       Isotonic backend (``repro.kernels.dispatch``).
+  plan : repro.plan.ExecutionPlan or None
+      Pin an execution plan for all of this call's dispatch decisions.
   sort_context : SortContext or None
       A ``SortContext`` built on ``values``: the underlying ascending
       soft sort reuses the caller's argsort instead of re-sorting.
@@ -302,7 +319,7 @@ def soft_quantile(
   values = jnp.asarray(values)
   n = values.shape[-1]
   s = soft_sort(values, regularization_strength, regularization,
-                direction="ASCENDING", impl=impl,
+                direction="ASCENDING", impl=impl, plan=plan,
                 sort_context=sort_context)
   idx = jnp.clip(jnp.asarray(round(q * (n - 1)), jnp.int32), 0, n - 1)
   return s[..., idx]

@@ -5,8 +5,9 @@
 `P(w)` is permutation-invariant in `w`, so `w` need not be sorted by the
 caller.  Two registered pipelines compute it (dispatch registry keys
 ``("projection", regularization, path)``, selected by
-``repro.kernels.dispatch.resolve_projection`` — argument > env
-``REPRO_PROJECTION`` > default, with ``"auto"`` resolving to ``"fused"``):
+``repro.kernels.dispatch.resolve_projection`` through the unified chain —
+explicit ``path=`` > env ``REPRO_PROJECTION`` > execution plan; every
+built-in plan resolves to ``"fused"``):
 
 ``"fused"`` (default)
     The whole pipeline is ONE ``jax.custom_vjp``: packed single-key
@@ -73,7 +74,8 @@ _HALF_DTYPES = (jnp.bfloat16, jnp.float16)
 
 
 def _composed_projection(regularization: str, z: Array, w: Array,
-                         impl: str | None, *, z_is_sorted: bool = False,
+                         impl: str | None, plan=None, *,
+                         z_is_sorted: bool = False,
                          w_is_sorted: bool = False, z_perm=None,
                          w_perm=None) -> Array:
   """z: (..., n); w: (n,) or broadcastable to z.shape.
@@ -90,9 +92,9 @@ def _composed_projection(regularization: str, z: Array, w: Array,
     w_sorted, _ = sort_descending(jnp.broadcast_to(w, z.shape))
   s, sigma = sort_descending(z)
   if regularization == "l2":
-    v = isotonic_l2(s - w_sorted, impl)
+    v = isotonic_l2(s - w_sorted, impl, plan)
   else:
-    v = isotonic_kl(s, w_sorted, impl)
+    v = isotonic_kl(s, w_sorted, impl, plan)
   # out = z - v_{sigma^{-1}}, i.e. out[sigma_k] = z[sigma_k] - v[k].
   return z - apply_inverse_permutation(v, sigma)
 
@@ -139,7 +141,7 @@ def _sorted_w_unbatched(ws: Array) -> tuple[Array, Array, Array]:
 # ---------------------------------------------------------------------------
 
 
-def _fused_forward(regularization, impl, z_is_sorted, w_is_sorted,
+def _fused_forward(regularization, impl, plan, z_is_sorted, w_is_sorted,
                    z, w, z_perm, w_perm):
   """Shared primal: returns (out, residuals)."""
   n = z.shape[-1]
@@ -170,11 +172,11 @@ def _fused_forward(regularization, impl, z_is_sorted, w_is_sorted,
 
   if regularization == "l2":
     y = s - w_sorted                       # broadcasts unbatched w_sorted
-    v = _dispatch.dispatch("isotonic", "l2", impl, y)
+    v = _dispatch.dispatch("isotonic", "l2", impl, y, plan=plan)
     w_b = None
   else:
     w_b = jnp.broadcast_to(w_sorted, s.shape)
-    v = _dispatch.dispatch("isotonic", "kl", impl, s, w_b)
+    v = _dispatch.dispatch("isotonic", "kl", impl, s, w_b, plan=plan)
 
   vd = lax.stop_gradient(v)
   starts = _svjp.block_starts(vd.reshape(-1, n)).reshape(v.shape)
@@ -209,21 +211,21 @@ def _perm_cotangent(perm):
       lambda a: np.zeros(np.shape(a), jax.dtypes.float0), perm)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
-def _fused_projection(regularization, impl, z_is_sorted, w_is_sorted,
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def _fused_projection(regularization, impl, plan, z_is_sorted, w_is_sorted,
                       z, w, z_perm, w_perm):
-  return _fused_forward(regularization, impl, z_is_sorted, w_is_sorted,
-                        z, w, z_perm, w_perm)[0]
+  return _fused_forward(regularization, impl, plan, z_is_sorted,
+                        w_is_sorted, z, w, z_perm, w_perm)[0]
 
 
-def _fused_fwd(regularization, impl, z_is_sorted, w_is_sorted,
+def _fused_fwd(regularization, impl, plan, z_is_sorted, w_is_sorted,
                z, w, z_perm, w_perm):
-  out, res = _fused_forward(regularization, impl, z_is_sorted, w_is_sorted,
-                            z, w, z_perm, w_perm)
+  out, res = _fused_forward(regularization, impl, plan, z_is_sorted,
+                            w_is_sorted, z, w, z_perm, w_perm)
   return out, res + (z_perm, w_perm)
 
 
-def _fused_bwd(regularization, impl, z_is_sorted, w_is_sorted, res, g):
+def _fused_bwd(regularization, impl, plan, z_is_sorted, w_is_sorted, res, g):
   """Whole-pipeline VJP from saved residuals: gather -> segmented
   reduction (Lemma 2, dispatched backward table) -> gather.  No re-sort,
   no scatter."""
@@ -236,12 +238,13 @@ def _fused_bwd(regularization, impl, z_is_sorted, w_is_sorted, res, g):
   g_v = -(g if sigma is None else jnp.take_along_axis(g, sigma, axis=-1))
   if regularization == "l2":
     g_y = _dispatch.dispatch_backward("projection", "l2", None,
-                                      g_v, starts, start_idx, end_idx)
+                                      g_v, starts, start_idx, end_idx,
+                                      plan=plan)
     g_s, g_ws = g_y, -g_y
   else:
     g_s, g_ws = _dispatch.dispatch_backward("projection", "kl", None,
                                             s, w_b, g_v, starts,
-                                            start_idx, end_idx)
+                                            start_idx, end_idx, plan=plan)
 
   # z cotangent: identity term plus the solve term mapped back through
   # sigma^{-1} (a gather — sigma^{-1} is already a residual).
@@ -265,9 +268,10 @@ _fused_projection.defvjp(_fused_fwd, _fused_bwd)
 
 
 def _fused_entry(regularization: str, z: Array, w: Array, impl: str | None,
-                 *, z_is_sorted: bool = False, w_is_sorted: bool = False,
-                 z_perm=None, w_perm=None) -> Array:
-  return _fused_projection(regularization, impl, bool(z_is_sorted),
+                 plan=None, *, z_is_sorted: bool = False,
+                 w_is_sorted: bool = False, z_perm=None,
+                 w_perm=None) -> Array:
+  return _fused_projection(regularization, impl, plan, bool(z_is_sorted),
                            bool(w_is_sorted), z, w, z_perm, w_perm)
 
 
@@ -285,7 +289,7 @@ for _reg in _REGS:
 
 def projection_permutahedron(
     z: Array, w: Array, regularization: str = "l2",
-    impl: str | None = None, *, path: str | None = None,
+    impl: str | None = None, *, path: str | None = None, plan=None,
     z_is_sorted: bool = False, w_is_sorted: bool = False,
     z_perm=None, w_perm=None) -> Array:
   """Project `z` onto the permutahedron generated by `w` (paper §4).
@@ -310,7 +314,12 @@ def projection_permutahedron(
       under jit/grad (see ``isotonic_l2`` for why).
   path : {"auto", "fused", "composed"} or None
       Pipeline selection; None defers to env ``REPRO_PROJECTION`` then
-      the default (``"auto"`` -> ``"fused"``).
+      the execution-plan chain (plans resolve to ``"fused"``).
+  plan : repro.plan.ExecutionPlan or None
+      Pin an execution plan for every decision this call makes (forward
+      backend, backward backend, projection path).  Rides the fused
+      custom VJP as a static argument, so — unlike ``use_plan`` — it
+      survives jit and governs the lazily-traced backward too.
   z_is_sorted, w_is_sorted : bool
       Caller guarantees the argument is already descending along the
       last axis — the fused path skips that sort entirely.  (The
@@ -340,12 +349,14 @@ def projection_permutahedron(
   w = jnp.asarray(w, z.dtype)
   dtype = z.dtype
   if dtype in _HALF_DTYPES:
-    # Solve in f32 (the backends' contract); cast the projection back.
+    # Promote before the pipeline (not just the solve): the fused path's
+    # packed integer sort keys assume f32, so the whole projection runs
+    # promoted and only the result is demoted.
     out = _dispatch.dispatch_projection(
         z.astype(jnp.float32), w.astype(jnp.float32), regularization, impl,
-        path, z_is_sorted=z_is_sorted, w_is_sorted=w_is_sorted,
+        path, plan=plan, z_is_sorted=z_is_sorted, w_is_sorted=w_is_sorted,
         z_perm=z_perm, w_perm=w_perm)
     return out.astype(dtype)
   return _dispatch.dispatch_projection(
-      z, w, regularization, impl, path, z_is_sorted=z_is_sorted,
+      z, w, regularization, impl, path, plan=plan, z_is_sorted=z_is_sorted,
       w_is_sorted=w_is_sorted, z_perm=z_perm, w_perm=w_perm)

@@ -6,7 +6,11 @@ implementation, and a *backward* registry mapping
 ``(op, regularization, backward_backend)`` -> VJP implementation.  All
 registered implementations share the same contract — they take f32-safe
 arrays whose *last* axis is the problem dimension, flattened here to
-``(rows, n)``, and return the same shape.
+``(rows, n)``, and return the same shape.  The promote-compute-demote
+dtype contract is enforced *here*, uniformly: half-precision floating
+inputs (bf16/f16) are promoted to f32 before any backend sees them and
+the result is cast back, for every backend and both directions — no
+backend carries its own casting wrapper.
 
 Forward backends
 ----------------
@@ -22,11 +26,7 @@ Forward backends
 * ``"minimax"``  O(n^2) vectorized closed form (``repro.kernels.ref``) with
                  zero data-dependent control flow — the right trade for
                  small n and under SPMD.
-* ``"auto"``     resolves deterministically from platform and shape at trace
-                 time: TPU -> ``"pallas"``; otherwise ``"minimax"`` for
-                 small problems (n <= 64 and rows * n^2 bounded) else
-                 ``"scan"``.  An *unknown* shape (``shape=None``) resolves
-                 to ``"scan"`` — never to the O(n^2) closed form.
+* ``"auto"``     defers the choice to the execution-plan chain (below).
 
 Backward backends
 -----------------
@@ -34,21 +34,35 @@ The exact O(n) segment-algebra VJP (paper Lemma 2) has two registered
 formulations (``repro.kernels.segment_vjp``): ``"segscan"`` (default;
 segmented prefix scans + block-end gathers, scatter-free) and
 ``"scatter"`` (the original ``segment_sum`` over globally-offset ids).
-``resolve_backward`` follows the same precedence chain as the forward path
-with its own ``REPRO_BACKWARD`` environment variable.
 
-Selection precedence: explicit ``backend=`` argument > environment variable
-(``REPRO_BACKEND`` / ``REPRO_BACKWARD``) > ``set_default_backend`` /
-``use_backend`` process default (initially ``"auto"``).
+Selection: ONE precedence chain for all three decision kinds (forward
+backend, backward backend, projection path)::
+
+    explicit argument (``impl=`` / ``backend=`` / ``path=``)
+      > environment (REPRO_BACKEND / REPRO_BACKWARD / REPRO_PROJECTION)
+      > execution plan (per-call ``plan=`` or the active ``use_plan`` /
+        ``set_active_plan`` plan)
+      > packaged default plan (src/repro/plan/default_plan.json,
+        emitted by tools/autotune.py from measured BENCH sweeps)
+      > built-in plan (repro.plan.builtin_plan: TPU -> pallas, small-n
+        minimax under a memory cap, scan otherwise; segscan; fused)
+
+``"auto"`` — as an argument or environment value — means "fall through
+to the plan chain".  Resolution is deterministic given (request,
+environment, plans, platform, dtype, shape): the same inputs always pick
+the same implementation, so a jit cache entry never flips backends
+between traces.  The legacy ``use_backend`` / ``use_backward`` /
+``set_default_backend`` entry points survive as thin shims that install
+an overriding rule on the active plan.
 
 Observability: every resolution and every dispatched call (forward and
 backward) is recorded into ``repro.obs.metrics`` (counters keyed by
-``(op, regularization, backend)``, shape buckets, auto-routing decisions,
-and bounded trace-cache hit/miss/eviction counts), and every backend call
-runs under a ``jax.named_scope`` so kernels are attributable in jaxprs /
-HLO metadata / ``jax.profiler`` traces.  All of this happens at Python
-trace time only, and is a no-op when metrics are disabled
-(``REPRO_METRICS=0``).
+``(op, regularization, backend)``, shape buckets, per-plan decision
+counters ``plan_decide{kind,backend,source,plan}``, and bounded
+trace-cache hit/miss/eviction counts), and every backend call runs under
+a ``jax.named_scope`` so kernels are attributable in jaxprs / HLO
+metadata / ``jax.profiler`` traces.  All of this happens at Python trace
+time only, and is a no-op when metrics are disabled (``REPRO_METRICS=0``).
 """
 
 from __future__ import annotations
@@ -60,10 +74,12 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro import plan as _plan
 from repro.obs import metrics as _metrics
 from repro.obs import tracing as _tracing
 
 Array = jax.Array
+ExecutionPlan = _plan.ExecutionPlan
 
 ENV_VAR = "REPRO_BACKEND"
 BWD_ENV_VAR = "REPRO_BACKWARD"
@@ -73,22 +89,25 @@ BACKENDS = ("auto", "lax", "scan", "pallas", "minimax")
 BWD_BACKENDS = ("auto", "segscan", "scatter")
 PROJECTION_PATHS = ("auto", "fused", "composed")
 
-# n at or below which the O(n^2) closed form beats the log-depth machines
-# off-TPU (no control flow at all, trivially vectorized; memory is
-# rows * n^2 floats).
-AUTO_MINIMAX_MAX_N = 64
-
-# Cap on rows * n^2 f32 elements for auto-selecting minimax (~64 MB): a
-# large flattened batch at small n (the MoE-router regime) must fall back
-# to the O(rows * n log n) scan machine instead of materializing rows
-# (n, n) matrices.
-AUTO_MINIMAX_MAX_ELEMS = 16_000_000
+# Backwards-compatible aliases for the (former) hardcoded auto cutoffs;
+# the authoritative values now live in the built-in plan
+# (repro.plan.builtin_plan) as ordinary shape-bucket rule entries.
+AUTO_MINIMAX_MAX_N = _plan.BUILTIN_MINIMAX_MAX_N
+AUTO_MINIMAX_MAX_ELEMS = _plan.BUILTIN_MINIMAX_MAX_ELEMS
 
 _REGISTRY: dict[tuple[str, str, str], Callable[..., Array]] = {}
 _BWD_REGISTRY: dict[tuple[str, str, str], Callable[..., tuple]] = {}
 
-_DEFAULT = {"value": "auto"}
-_BWD_DEFAULT = {"value": "auto"}
+# One spec per decision kind: env var, allowed request values, and the
+# metrics counter each resolution records under.
+_KIND_SPECS = {
+    "forward": (ENV_VAR, BACKENDS, "dispatch_resolve"),
+    "backward": (BWD_ENV_VAR, BWD_BACKENDS, "dispatch_bwd_resolve"),
+    "projection": (PROJECTION_ENV_VAR, PROJECTION_PATHS,
+                   "projection_resolve"),
+}
+
+_HALF_DTYPES = (jnp.bfloat16, jnp.float16)
 
 
 def register(op: str, regularization: str, backend: str):
@@ -124,50 +143,95 @@ def registered_backward_backends(
                if o == op and r == regularization)
 
 
+# ---------------------------------------------------------------------------
+# Plan-based selection state + legacy shims.
+# ---------------------------------------------------------------------------
+
+# Re-exported so callers can keep importing selection tools from the
+# dispatch choke point.
+use_plan = _plan.use_plan
+set_active_plan = _plan.set_active_plan
+get_active_plan = _plan.get_active_plan
+load_plan = _plan.load_plan
+
+
+def _override_plan(kind: str, backend: str) -> ExecutionPlan:
+  """Active plan with an unconditional ``kind -> backend`` rule prepended
+  (``"auto"`` instead *removes* any unconditional override of that kind,
+  restoring fall-through to the default plans)."""
+  base = _plan.get_active_plan()
+  base_rules = base.rules if base is not None else ()
+  if backend == "auto":
+    rules = tuple(r for r in base_rules
+                  if not (r.kind == kind and not r.shape_constrained()
+                          and r.op == "*" and r.regularization == "*"
+                          and r.platform == "*" and r.dtype == "*"))
+  else:
+    rules = (_plan.PlanRule(kind, backend),) + tuple(base_rules)
+  name = f"{base.name if base is not None else 'override'}+{kind}={backend}"
+  return ExecutionPlan(name=name, rules=rules)
+
+
+def _unconditional_choice(kind: str) -> str:
+  """Backend of the first fully-unconditional active-plan rule of ``kind``
+  (the legacy 'process default'), or ``"auto"`` when none is installed."""
+  base = _plan.get_active_plan()
+  for r in (base.rules if base is not None else ()):
+    if (r.kind == kind and not r.shape_constrained() and r.op == "*"
+        and r.regularization == "*" and r.platform == "*"
+        and r.dtype == "*"):
+      return r.backend
+  return "auto"
+
+
 def get_default_backend() -> str:
-  return _DEFAULT["value"]
+  """Deprecated shim: the active plan's unconditional forward override."""
+  return _unconditional_choice("forward")
 
 
 def set_default_backend(backend: str) -> None:
+  """Deprecated shim over ``set_active_plan``: installs an unconditional
+  forward-backend rule on the active plan (``"auto"`` removes it)."""
   if backend not in BACKENDS:
     raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
-  _DEFAULT["value"] = backend
+  _plan.set_active_plan(_override_plan("forward", backend))
 
 
 @contextlib.contextmanager
 def use_backend(backend: str):
-  """Temporarily select the default backend (trace-time only: custom_vjp
-  fwd rules are traced lazily, so pass ``backend=`` explicitly under jit)."""
-  prev = _DEFAULT["value"]
-  set_default_backend(backend)
-  try:
+  """Deprecated shim over ``use_plan``: scoped unconditional forward rule
+  (trace-time only: custom_vjp fwd rules are traced lazily, so pass
+  ``backend=`` explicitly under jit)."""
+  if backend not in BACKENDS:
+    raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+  with _plan.use_plan(_override_plan("forward", backend)):
     yield
-  finally:
-    _DEFAULT["value"] = prev
 
 
 def get_default_backward() -> str:
-  return _BWD_DEFAULT["value"]
+  """Deprecated shim: the active plan's unconditional backward override."""
+  return _unconditional_choice("backward")
 
 
 def set_default_backward(backend: str) -> None:
+  """Deprecated shim: unconditional backward rule on the active plan."""
   if backend not in BWD_BACKENDS:
     raise ValueError(
         f"backward backend must be one of {BWD_BACKENDS}, got {backend!r}")
-  _BWD_DEFAULT["value"] = backend
+  _plan.set_active_plan(_override_plan("backward", backend))
 
 
 @contextlib.contextmanager
 def use_backward(backend: str):
-  """Temporarily select the backward (VJP) formulation (trace-time only:
-  like ``use_backend``, custom_vjp bwd rules are traced lazily under jit —
-  eager/top-level ``jax.grad`` calls are the reliable use)."""
-  prev = _BWD_DEFAULT["value"]
-  set_default_backward(backend)
-  try:
+  """Deprecated shim over ``use_plan`` for the backward (VJP) formulation
+  (trace-time only: like ``use_backend``, custom_vjp bwd rules are traced
+  lazily under jit — eager/top-level ``jax.grad`` calls are the reliable
+  use)."""
+  if backend not in BWD_BACKENDS:
+    raise ValueError(
+        f"backward backend must be one of {BWD_BACKENDS}, got {backend!r}")
+  with _plan.use_plan(_override_plan("backward", backend)):
     yield
-  finally:
-    _BWD_DEFAULT["value"] = prev
 
 
 def _env_choice(env_var: str, allowed: tuple[str, ...]) -> str | None:
@@ -186,6 +250,73 @@ def _env_choice(env_var: str, allowed: tuple[str, ...]) -> str | None:
   return raw
 
 
+def resolve(
+    kind: str,
+    op: str,
+    regularization: str,
+    request: str | None = None,
+    *,
+    shape: tuple[int, ...] | None = None,
+    platform: str | None = None,
+    dtype: str | None = None,
+    plan: ExecutionPlan | None = None,
+) -> str:
+  """THE precedence chain, shared by all three decision kinds.
+
+  ``explicit request > environment > plan (arg/active) > packaged
+  default plan > built-in plan``; a request or environment value of
+  ``"auto"`` falls through to the plan chain.  Deterministic given its
+  inputs, so a jit cache entry never flips backends between traces.
+  """
+  env_var, allowed, counter = _KIND_SPECS[kind]
+  if request and request != "auto":
+    if request not in allowed:
+      # Tolerate registered-but-unlisted names (an out-of-tree backend
+      # registered via ``register``): the registry check below is the
+      # real gate; ``allowed`` only vets the built-in spelling set.
+      known = _registered_for(kind, op, regularization)
+      if request not in known:
+        raise ValueError(
+            f"no {kind} backend {request!r} for op={op!r}, "
+            f"regularization={regularization!r}; have {known}")
+    b, source = request, "arg"
+  else:
+    env = _env_choice(env_var, allowed)
+    if env and env != "auto":
+      b, source = env, "env"
+    else:
+      platform = platform or jax.default_backend()
+      b, source, _ = _plan.resolve_via_plans(
+          kind, op, regularization, platform=platform,
+          dtype=dtype or "*", shape=shape, plan=plan)
+  _check_registered(kind, op, regularization, b)
+  _metrics.counter_inc(counter, op=op, regularization=regularization,
+                       backend=b, source=source)
+  return b
+
+
+def _registered_for(kind: str, op: str,
+                    regularization: str) -> tuple[str, ...]:
+  if kind == "backward":
+    return registered_backward_backends(op, regularization)
+  return registered_backends(op, regularization)
+
+
+def _check_registered(kind: str, op: str, regularization: str,
+                      backend: str) -> None:
+  if kind == "projection":
+    # The projection registry is populated on repro.core.projection
+    # import; dispatch_projection does its own lookup with a pointer to
+    # that import, and reg-less queries (bench meta) have no key to check.
+    return
+  reg_map = _BWD_REGISTRY if kind == "backward" else _REGISTRY
+  if (op, regularization, backend) not in reg_map:
+    raise ValueError(
+        f"no {kind} backend {backend!r} registered for op={op!r}, "
+        f"regularization={regularization!r}; have "
+        f"{_registered_for(kind, op, regularization)}")
+
+
 def resolve_backend(
     op: str,
     regularization: str,
@@ -193,81 +324,49 @@ def resolve_backend(
     *,
     shape: tuple[int, ...] | None = None,
     platform: str | None = None,
+    dtype: str | None = None,
+    plan: ExecutionPlan | None = None,
 ) -> str:
-  """Resolve a possibly-None/"auto" backend request to a concrete backend.
-
-  Deterministic given (request, environment, platform, shape): the same
-  inputs always pick the same implementation, so a jit cache entry never
-  flips backends between traces.
-  """
-  if backend:
-    b, source = backend, "arg"
-  else:
-    env = _env_choice(ENV_VAR, BACKENDS)
-    if env:
-      b, source = env, "env"
-    else:
-      b, source = _DEFAULT["value"], "default"
-  if b != "auto":
-    if (op, regularization, b) not in _REGISTRY:
-      raise ValueError(
-          f"no backend {b!r} registered for op={op!r}, "
-          f"regularization={regularization!r}; have "
-          f"{registered_backends(op, regularization)}")
-    _metrics.counter_inc("dispatch_resolve", op=op,
-                         regularization=regularization, backend=b,
-                         source=source)
-    return b
-  platform = platform or jax.default_backend()
-  if platform == "tpu":
-    b, why = "pallas", "tpu"
-  elif shape is None:
-    # Unknown shape must NOT satisfy the small-n minimax test (an n=0
-    # placeholder would silently pick the O(n^2) backend for arbitrarily
-    # large problems); fall back to the shape-oblivious log-depth machine.
-    b, why = "scan", "shapeless"
-  else:
-    n = shape[-1]
-    rows = 1
-    for d in shape[:-1]:
-      rows *= d
-    if n <= AUTO_MINIMAX_MAX_N and rows * n * n <= AUTO_MINIMAX_MAX_ELEMS:
-      b, why = "minimax", "small_n"
-    else:
-      b, why = "scan", "large_or_batched"
-  _metrics.counter_inc("dispatch_resolve", op=op,
-                       regularization=regularization, backend=b,
-                       source="auto")
-  _metrics.counter_inc("dispatch_auto_route", platform=platform,
-                       backend=b, reason=why)
-  return b
+  """Resolve a forward-backend request through the unified chain."""
+  return resolve("forward", op, regularization, backend, shape=shape,
+                 platform=platform, dtype=dtype, plan=plan)
 
 
 def resolve_backward(
     op: str,
     regularization: str,
     backend: str | None = None,
+    *,
+    shape: tuple[int, ...] | None = None,
+    platform: str | None = None,
+    dtype: str | None = None,
+    plan: ExecutionPlan | None = None,
 ) -> str:
-  """Resolve a backward (VJP) backend request: arg > env > default."""
-  if backend:
-    b, source = backend, "arg"
-  else:
-    env = _env_choice(BWD_ENV_VAR, BWD_BACKENDS)
-    if env:
-      b, source = env, "env"
-    else:
-      b, source = _BWD_DEFAULT["value"], "default"
-  if b == "auto":
-    b, source = "segscan", source if source != "default" else "auto"
-  if (op, regularization, b) not in _BWD_REGISTRY:
-    raise ValueError(
-        f"no backward backend {b!r} registered for op={op!r}, "
-        f"regularization={regularization!r}; have "
-        f"{registered_backward_backends(op, regularization)}")
-  _metrics.counter_inc("dispatch_bwd_resolve", op=op,
-                       regularization=regularization, backend=b,
-                       source=source)
-  return b
+  """Resolve a backward (VJP) backend request through the unified chain."""
+  return resolve("backward", op, regularization, backend, shape=shape,
+                 platform=platform, dtype=dtype, plan=plan)
+
+
+def resolve_projection(
+    path: str | None = None,
+    regularization: str | None = None,
+    *,
+    shape: tuple[int, ...] | None = None,
+    platform: str | None = None,
+    dtype: str | None = None,
+    plan: ExecutionPlan | None = None,
+) -> str:
+  """Resolve a projection-path request through the unified chain.
+
+  The projection registry (``("projection", reg, path)`` keys, populated
+  on ``repro.core.projection`` import) holds whole-pipeline
+  implementations: ``"fused"`` — single custom VJP around sort + isotonic
+  solve + gather, packed integer sorts, gather-only backward;
+  ``"composed"`` — the reference chain of four differentiable primitives,
+  kept reachable (env/plan ``composed``) for differential testing.
+  """
+  return resolve("projection", "projection", regularization, path,
+                 shape=shape, platform=platform, dtype=dtype, plan=plan)
 
 
 # Trace-key cache: (op, reg, backend, flat shape, dtype) tuples already seen
@@ -297,35 +396,26 @@ def _trace_cache_note(key: tuple) -> None:
   _metrics.counter_inc("dispatch_trace_cache_miss")
 
 
-def resolve_projection(path: str | None = None) -> str:
-  """Resolve a projection-path request: arg > env > default ("fused").
-
-  The projection registry (``("projection", reg, path)`` keys, populated on
-  ``repro.core.projection`` import) holds whole-pipeline implementations:
-  ``"fused"`` — single custom VJP around sort + isotonic solve + gather,
-  packed integer sorts, gather-only backward; ``"composed"`` — the
-  reference chain of four differentiable primitives, kept reachable (env
-  ``REPRO_PROJECTION=composed``) for differential testing.
-  """
-  if path:
-    p, source = path, "arg"
-  else:
-    env = _env_choice(PROJECTION_ENV_VAR, PROJECTION_PATHS)
-    if env:
-      p, source = env, "env"
-    else:
-      p, source = "auto", "default"
-  if p == "auto":
-    p = "fused"
-  if p not in PROJECTION_PATHS:
-    raise ValueError(
-        f"projection path must be one of {PROJECTION_PATHS}, got {p!r}")
-  _metrics.counter_inc("projection_resolve", path=p, source=source)
-  return p
+def _promote_flat(args: tuple[Array, ...], n: int):
+  """Flatten to (rows, n) and apply the uniform promote-compute contract:
+  every inexact (floating/complex) argument below f32 is promoted to f32;
+  integer/bool structure arrays pass through untouched.  Returns the flat
+  list plus the original inexact dtype to demote results back to (None
+  when no argument was inexact)."""
+  inexact = [a.dtype for a in args if jnp.issubdtype(a.dtype, jnp.inexact)]
+  orig = jnp.result_type(*inexact) if inexact else None
+  flat = []
+  for a in args:
+    f = a.reshape(-1, n)
+    if jnp.issubdtype(a.dtype, jnp.inexact):
+      f = f.astype(jnp.promote_types(a.dtype, jnp.float32))
+    flat.append(f)
+  return flat, orig
 
 
 def dispatch_projection(z: Array, w: Array, regularization: str,
                         impl: str | None, path: str | None = None,
+                        plan: ExecutionPlan | None = None,
                         **kwargs) -> Array:
   """Route a permutahedron projection to the fused or composed pipeline.
 
@@ -336,7 +426,8 @@ def dispatch_projection(z: Array, w: Array, regularization: str,
   permutations.  Runs under a ``repro_projection_<reg>_<path>`` named
   scope; fused calls are counted as ``projection_fused_calls``.
   """
-  p = resolve_projection(path)
+  p = resolve_projection(path, regularization, shape=z.shape,
+                         dtype=str(z.dtype), plan=plan)
   fn = _REGISTRY.get(("projection", regularization, p))
   if fn is None:
     raise ValueError(
@@ -349,17 +440,18 @@ def dispatch_projection(z: Array, w: Array, regularization: str,
   _metrics.counter_inc("dispatch_calls", op="projection",
                        regularization=regularization, backend=p)
   with _tracing.backend_scope("projection", regularization, p):
-    return fn(z, w, impl, **kwargs)
+    return fn(z, w, impl, plan=plan, **kwargs)
 
 
 def dispatch(op: str, regularization: str, backend: str | None,
-             *args: Array) -> Array:
+             *args: Array, plan: ExecutionPlan | None = None) -> Array:
   """Route a batched forward pass to the resolved backend.
 
   All ``args`` must share a common shape whose last axis is the problem
   dimension; leading batch axes are flattened to a single row axis before
   the backend call and restored afterwards, so backends only ever see
-  (rows, n).
+  (rows, n).  Half-precision inputs are promoted to f32 for the solve and
+  the result demoted back — uniformly, for every backend.
 
   The backend call runs under ``jax.named_scope`` (see
   ``repro.obs.tracing.scope_name``) so its primitives are attributable in
@@ -367,42 +459,53 @@ def dispatch(op: str, regularization: str, backend: str | None,
   call counts, flattened shape buckets, and trace-cache hit/miss counters.
   """
   shape = args[0].shape
-  b = resolve_backend(op, regularization, backend, shape=shape)
+  in_dtype = str(jnp.result_type(args[0]))
+  b = resolve_backend(op, regularization, backend, shape=shape,
+                      dtype=in_dtype, plan=plan)
   fn = _REGISTRY[(op, regularization, b)]
   n = shape[-1]
-  flat = [a.reshape(-1, n) for a in args]
+  flat, orig_dtype = _promote_flat(args, n)
   if _metrics.enabled():
     rows = flat[0].shape[0] if n else 0
     _metrics.counter_inc("dispatch_calls", op=op,
                          regularization=regularization, backend=b)
     _metrics.counter_inc("dispatch_shape", op=op,
                          bucket=_metrics.shape_bucket(rows, n))
-    _trace_cache_note((op, regularization, b, flat[0].shape,
-                       str(jnp.result_type(args[0]))))
+    _trace_cache_note((op, regularization, b, flat[0].shape, in_dtype))
   with _tracing.backend_scope(op, regularization, b):
-    return fn(*flat).reshape(shape)
+    out = fn(*flat)
+  if orig_dtype is not None:
+    out = out.astype(orig_dtype)
+  return out.reshape(shape)
 
 
 def dispatch_backward(op: str, regularization: str, backend: str | None,
-                      *args: Array):
+                      *args: Array, plan: ExecutionPlan | None = None):
   """Route a batched VJP to the resolved backward backend.
 
-  Same flattening contract as ``dispatch``; the impl may return a single
-  gradient array or a tuple of gradient arrays (each is restored to the
-  original batch shape).  Runs under a ``repro_<op>_bwd_<reg>_<backend>``
-  named scope and records ``dispatch_bwd_calls`` counters.
+  Same flattening and promote-compute-demote contract as ``dispatch``
+  (integer/bool segment-structure arrays pass through unpromoted); the
+  impl may return a single gradient array or a tuple of gradient arrays
+  (each is restored to the original batch shape).  Runs under a
+  ``repro_<op>_bwd_<reg>_<backend>`` named scope and records
+  ``dispatch_bwd_calls`` counters.
   """
   shape = args[0].shape
-  b = resolve_backward(op, regularization, backend)
+  b = resolve_backward(op, regularization, backend, shape=shape,
+                       dtype=str(jnp.result_type(args[0])), plan=plan)
   fn = _BWD_REGISTRY[(op, regularization, b)]
   n = shape[-1]
-  flat = [a.reshape(-1, n) for a in args]
+  flat, orig_dtype = _promote_flat(args, n)
   _metrics.counter_inc("dispatch_bwd_calls", op=op,
                        regularization=regularization, backend=b)
   with _tracing.backend_scope(f"{op}_bwd", regularization, b):
     out = fn(*flat)
   if isinstance(out, tuple):
+    if orig_dtype is not None:
+      out = tuple(o.astype(orig_dtype) for o in out)
     return tuple(o.reshape(shape) for o in out)
+  if orig_dtype is not None:
+    out = out.astype(orig_dtype)
   return out.reshape(shape)
 
 
@@ -424,19 +527,11 @@ register("isotonic", "kl", "scan")(_pav_scan.pav_kl_scan)
 register("isotonic", "l2", "pallas")(_pav.pav_l2)
 register("isotonic", "kl", "pallas")(_pav.pav_kl)
 
-
-@register("isotonic", "l2", "minimax")
-def _pav_l2_minimax(y: Array) -> Array:
-  # promote (not downcast): f64 stays f64 under x64, halves compute in f32
-  yc = y.astype(jnp.promote_types(y.dtype, jnp.float32))
-  return _ref.pav_l2_ref(yc).astype(y.dtype)
-
-
-@register("isotonic", "kl", "minimax")
-def _pav_kl_minimax(s: Array, w: Array) -> Array:
-  dt = jnp.promote_types(s.dtype, jnp.float32)
-  return _ref.pav_kl_ref(s.astype(dt), w.astype(dt)).astype(s.dtype)
-
+# No per-backend casting wrappers: ``dispatch`` owns the uniform
+# promote-compute-demote contract, so the O(n^2) closed forms register
+# bare like every other backend.
+register("isotonic", "l2", "minimax")(_ref.pav_l2_ref)
+register("isotonic", "kl", "minimax")(_ref.pav_kl_ref)
 
 register_backward("isotonic", "l2", "segscan")(_svjp.isotonic_l2_bwd_segscan)
 register_backward("isotonic", "l2", "scatter")(_svjp.isotonic_l2_bwd_scatter)

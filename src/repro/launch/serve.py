@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import plan as repro_plan
 from repro.configs.base import get_config
 from repro.data.pipeline import pipeline_for_arch
 from repro.launch import steps as ST
@@ -29,8 +30,8 @@ from repro.obs.tracing import trace_annotation
 
 
 def greedy(logits):
-  if logits.ndim == 3:   # audio codebook heads (B, K, V)
-    return jnp.argmax(logits, -1)
+  # Last axis is the vocabulary for every head layout, including audio
+  # codebook heads (B, K, V) — argmax(-1) keeps the per-codebook structure.
   return jnp.argmax(logits, -1)
 
 
@@ -44,8 +45,14 @@ def main():
   ap.add_argument("--bench-json", default=None, metavar="PATH",
                   help="write a schema-v1 BENCH artifact (prefill/decode "
                        "walls + dispatch metrics) on exit")
+  ap.add_argument("--plan", default=None, metavar="PLAN_JSON",
+                  help="install an ExecutionPlan (repro.plan JSON) as the "
+                       "active plan for every dispatch decision")
   ap.add_argument("--set", action="append", dest="overrides")
   args = ap.parse_args()
+
+  if args.plan:
+    repro_plan.set_active_plan(repro_plan.load_plan(args.plan))
 
   if args.smoke:
     from repro.configs.smoke import smoke_config
@@ -110,7 +117,8 @@ def main():
         args.bench_json, results,
         obs_artifacts.collect_meta(
             suite="serve", arch=args.arch, smoke=bool(args.smoke),
-            batch=args.batch, prompt_len=args.prompt_len, gen=args.gen))
+            batch=args.batch, prompt_len=args.prompt_len, gen=args.gen,
+            **repro_plan.plan_provenance()))
 
 
 if __name__ == "__main__":

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import plan as repro_plan
 from repro.checkpoint import checkpointer as ckpt
 from repro.configs.base import get_config
 from repro.data.pipeline import pipeline_for_arch
@@ -183,8 +184,14 @@ def main():
   ap.add_argument("--bench-json", default=None, metavar="PATH",
                   help="write a schema-v1 BENCH artifact (step-time "
                        "distribution + dispatch metrics) on exit")
+  ap.add_argument("--plan", default=None, metavar="PLAN_JSON",
+                  help="install an ExecutionPlan (repro.plan JSON) as the "
+                       "active plan for every dispatch decision")
   ap.add_argument("--set", action="append", dest="overrides")
   args = ap.parse_args()
+
+  if args.plan:
+    repro_plan.set_active_plan(repro_plan.load_plan(args.plan))
 
   if args.smoke:
     from repro.configs.smoke import smoke_config
@@ -215,7 +222,8 @@ def main():
         args.bench_json, trainer.bench_results(metrics),
         obs_artifacts.collect_meta(
             suite="train", arch=args.arch, smoke=bool(args.smoke),
-            batch=args.batch, seq=args.seq, steps=state.step))
+            batch=args.batch, seq=args.seq, steps=state.step,
+            **repro_plan.plan_provenance()))
 
 
 if __name__ == "__main__":

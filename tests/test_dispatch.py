@@ -33,14 +33,24 @@ def test_backward_registry_contains_both_formulations():
 
 
 def test_auto_resolution_is_deterministic_per_platform():
+  # Expected routes come from the committed autotuned default plan for
+  # the platform it was measured on (cpu: lax for small-n few-row and
+  # huge-n huge-batch cells, scan everywhere in between; see
+  # src/repro/plan/default_plan.json) and from the built-in plan
+  # everywhere else (tpu -> pallas; gpu is unmeasured -> builtin chain:
+  # minimax under its small-n cap, scan beyond).
   for platform, shape, want in [
       ("tpu", (4, 9), "pallas"),
       ("tpu", (256, 4096), "pallas"),
-      ("cpu", (4, 9), "minimax"),
-      ("cpu", (4, D.AUTO_MINIMAX_MAX_N), "minimax"),
-      ("cpu", (4, D.AUTO_MINIMAX_MAX_N + 1), "scan"),
-      # huge flattened batch at small n: rows * n^2 memory rules minimax out
+      ("cpu", (4, 9), "lax"),
+      ("cpu", (4, D.AUTO_MINIMAX_MAX_N + 1), "lax"),
       ("cpu", (1_000_000, 64), "scan"),
+      ("cpu", (1, 10_000), "scan"),
+      ("cpu", (32, 10_000), "scan"),
+      ("cpu", (256, 10_000), "lax"),
+      ("gpu", (4, 9), "minimax"),
+      # huge flattened batch at small n: rows * n^2 memory rules minimax out
+      ("gpu", (1_000_000, 64), "scan"),
       ("gpu", (4, 4096), "scan"),
   ]:
     got = [D.resolve_backend("isotonic", "l2", None, shape=shape,
@@ -267,3 +277,63 @@ def test_trace_key_cache_is_capped_and_counts_evictions(monkeypatch):
   finally:
     metrics.set_enabled(None)
     metrics.reset()
+
+
+# ---------------------------------------------------------------------------
+# Uniform promote-compute-demote dtype contract (bf16/f16) across backends.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("half", [jnp.bfloat16, jnp.float16])
+def test_half_dtype_contract_uniform_across_backends(half):
+  """Every backend must accept half inputs (dispatch promotes to f32,
+  computes, demotes) and agree with every other backend on the result —
+  no backend carries its own casting wrapper anymore."""
+  x32 = jnp.array(rng.normal(size=(3, 21)).astype(np.float32))
+  xh = x32.astype(half)
+  w32 = jnp.array(np.sort(rng.normal(size=(21,)))[::-1].copy()
+                  .astype(np.float32))
+  wh = jnp.broadcast_to(w32.astype(half), xh.shape)
+
+  outs_l2, outs_kl = {}, {}
+  for backend in ("lax", "scan", "minimax"):
+    o2 = D.dispatch("isotonic", "l2", backend, xh)
+    ok = D.dispatch("isotonic", "kl", backend, xh, wh)
+    assert o2.dtype == half and ok.dtype == half, backend
+    outs_l2[backend], outs_kl[backend] = o2, ok
+  for backend in ("scan", "minimax"):
+    np.testing.assert_allclose(
+        np.asarray(outs_l2[backend], np.float32),
+        np.asarray(outs_l2["lax"], np.float32), rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(
+        np.asarray(outs_kl[backend], np.float32),
+        np.asarray(outs_kl["lax"], np.float32), rtol=2e-2, atol=2e-2)
+
+
+def test_bf16_matches_f32_reference_through_operators():
+  """bf16 in -> bf16 out for the public operators, numerically tracking
+  the f32 result to bf16 precision, including gradients."""
+  x32 = jnp.array(rng.normal(size=(2, 17)).astype(np.float32))
+  xb = x32.astype(jnp.bfloat16)
+  for fn in (lambda v: soft_sort(v, 0.5, "l2"),
+             lambda v: soft_rank(v, 0.5, "kl")):
+    out32 = fn(x32)
+    outb = fn(xb)
+    assert outb.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(outb, np.float32),
+                               np.asarray(out32), rtol=4e-2, atol=4e-2)
+    g32 = jax.grad(lambda v: (fn(v) ** 2).sum())(x32)
+    gb = jax.grad(lambda v: (fn(v) ** 2).sum())(xb)
+    assert gb.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(gb, np.float32),
+                               np.asarray(g32), rtol=1e-1, atol=1e-1)
+
+
+def test_backward_dispatch_promotes_half_grads():
+  """dispatch_backward applies the same contract: half cotangents are
+  solved in f32 and demoted, int/bool structure args pass through."""
+  xb = jnp.array(rng.normal(size=(2, 9)).astype(np.float32)
+                 ).astype(jnp.bfloat16)
+  g = jax.grad(lambda v: isotonic_l2(v).astype(jnp.float32).sum())(xb)
+  assert g.dtype == jnp.bfloat16
+  assert bool(jnp.all(jnp.isfinite(g.astype(jnp.float32))))

@@ -46,17 +46,23 @@ def test_counters_increment_per_dispatch():
   assert c["dispatch_shape{bucket=r2^2_n2^3,op=isotonic}"] == 2
 
 
-def test_auto_route_counter_labels_platform_and_reason():
+def test_plan_decide_counter_labels_kind_source_and_plan():
+  from repro import plan as plan_mod
   D.resolve_backend("isotonic", "l2", None, shape=(4, 9), platform="cpu")
-  D.resolve_backend("isotonic", "l2", None, shape=(4, 9000), platform="cpu")
   D.resolve_backend("isotonic", "l2", None, shape=(4, 9), platform="tpu")
-  c = metrics.counters("dispatch_auto_route")
-  assert c["dispatch_auto_route{backend=minimax,platform=cpu,"
-           "reason=small_n}"] == 1
-  assert c["dispatch_auto_route{backend=scan,platform=cpu,"
-           "reason=large_or_batched}"] == 1
-  assert c["dispatch_auto_route{backend=pallas,platform=tpu,"
-           "reason=tpu}"] == 1
+  with plan_mod.use_plan(plan_mod.ExecutionPlan(
+      name="pinned", rules=(plan_mod.PlanRule("forward", "lax"),))):
+    D.resolve_backend("isotonic", "l2", None, shape=(4, 9), platform="cpu")
+  c = metrics.counters("plan_decide")
+  # cpu routes through the committed autotuned default plan (small-n,
+  # few-row cells measure fastest on lax); tpu is not measured there,
+  # so it falls through to the builtin pallas rule.
+  assert c["plan_decide{backend=lax,kind=forward,"
+           "plan=autotuned-cpu,source=default_plan}"] == 1
+  assert c["plan_decide{backend=pallas,kind=forward,"
+           "plan=builtin,source=builtin}"] == 1
+  assert c["plan_decide{backend=lax,kind=forward,"
+           "plan=pinned,source=plan}"] == 1
 
 
 # ---------------------------------------------------------------------------

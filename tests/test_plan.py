@@ -1,0 +1,327 @@
+"""ExecutionPlan layer: unified precedence chain (all three decision
+kinds), JSON round-trip + strict rejection, plan-pinned dispatch, and the
+``--plan`` == ``use_plan`` counter-trace equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.projection  # noqa: F401  (populates projection registry)
+from repro import plan as plan_mod
+from repro.core.isotonic import isotonic_kl, isotonic_l2
+from repro.core.operators import soft_rank, soft_sort
+from repro.kernels import dispatch as D
+from repro.obs import metrics
+
+rng = np.random.default_rng(23)
+
+
+@pytest.fixture(autouse=True)
+def clean_state(monkeypatch):
+  """No env overrides, no active plan, fresh metrics around every test."""
+  for var in (D.ENV_VAR, D.BWD_ENV_VAR, D.PROJECTION_ENV_VAR):
+    monkeypatch.delenv(var, raising=False)
+  plan_mod.set_active_plan(None)
+  metrics.set_enabled(True)
+  metrics.reset()
+  yield
+  plan_mod.set_active_plan(None)
+  metrics.set_enabled(None)
+  metrics.reset()
+
+
+# ---------------------------------------------------------------------------
+# The unified precedence chain: arg > env > active plan > default plan.
+# ---------------------------------------------------------------------------
+
+# (kind, env var, expected default-plan route on cpu, active-plan backend,
+#  env backend, explicit-arg backend).  The env/arg values are chosen to
+# differ from the level below them so each hop is observable.
+_CHAIN_CASES = [
+    ("forward", D.ENV_VAR, "lax", "scan", "minimax", "pallas"),
+    ("backward", D.BWD_ENV_VAR, "segscan", "scatter", "segscan", "scatter"),
+    ("projection", D.PROJECTION_ENV_VAR, "fused", "composed", "fused",
+     "composed"),
+]
+
+
+@pytest.mark.parametrize(
+    "kind,env_var,default_backend,plan_backend,env_backend,arg_backend",
+    _CHAIN_CASES, ids=[c[0] for c in _CHAIN_CASES])
+def test_precedence_chain_arg_env_active_default(
+    monkeypatch, kind, env_var, default_backend, plan_backend, env_backend,
+    arg_backend):
+  op = "projection" if kind == "projection" else "isotonic"
+
+  def res(request=None):
+    return D.resolve(kind, op, "l2", request, shape=(4, 9), platform="cpu")
+
+  # Level 4: no arg, no env, no active plan -> the committed default plan.
+  assert res() == default_backend
+  # Level 3: an active plan overrides the default plan.
+  pinned = plan_mod.ExecutionPlan(
+      name="pinned", rules=(plan_mod.PlanRule(kind, plan_backend),))
+  with plan_mod.use_plan(pinned):
+    assert res() == plan_backend
+    # Level 2: the environment overrides the active plan.
+    monkeypatch.setenv(env_var, env_backend)
+    assert res() == env_backend
+    # Level 1: an explicit argument overrides everything.
+    assert res(arg_backend) == arg_backend
+  # "auto" (arg or env) falls through to the plan chain, not to a backend.
+  monkeypatch.setenv(env_var, "auto")
+  assert res("auto") == default_backend
+
+
+def test_per_call_plan_beats_default_but_not_arg_or_env(monkeypatch):
+  pinned = plan_mod.ExecutionPlan(
+      name="arg-plan", rules=(plan_mod.PlanRule("forward", "lax"),))
+  assert D.resolve_backend("isotonic", "l2", None, shape=(4, 9),
+                           platform="cpu", plan=pinned) == "lax"
+  monkeypatch.setenv(D.ENV_VAR, "minimax")
+  assert D.resolve_backend("isotonic", "l2", None, shape=(4, 9),
+                           platform="cpu", plan=pinned) == "minimax"
+  assert D.resolve_backend("isotonic", "l2", "scan", shape=(4, 9),
+                           platform="cpu", plan=pinned) == "scan"
+
+
+def test_use_backend_shim_layers_on_plan_chain():
+  """The deprecated shims are plan rules now: same chain, same semantics."""
+  assert D.get_default_backend() == "auto"
+  with D.use_backend("minimax"):
+    assert D.get_default_backend() == "minimax"
+    assert D.resolve_backend("isotonic", "l2", None, shape=(4, 1000),
+                             platform="cpu") == "minimax"
+    # Explicit arg still beats the shim.
+    assert D.resolve_backend("isotonic", "l2", "lax", shape=(4, 9),
+                             platform="cpu") == "lax"
+  assert D.get_default_backend() == "auto"
+  D.set_default_backend("lax")
+  try:
+    assert D.resolve_backend("isotonic", "kl", None, shape=(4, 9),
+                             platform="cpu") == "lax"
+  finally:
+    D.set_default_backend("auto")
+  assert D.resolve_backend("isotonic", "kl", None, shape=(4, 9),
+                           platform="cpu") == "scan"
+
+
+def test_shape_constrained_rules_never_match_shapeless_queries():
+  """A plan cannot route an unknown-size problem to a size-gated backend
+  — the old shape=None -> minimax bug class is unrepresentable."""
+  gated = plan_mod.ExecutionPlan(name="gated", rules=(
+      plan_mod.PlanRule("forward", "minimax", max_n=64),
+      plan_mod.PlanRule("forward", "scan"),
+  ))
+  with plan_mod.use_plan(gated):
+    assert D.resolve_backend("isotonic", "l2", None, shape=(4, 9),
+                             platform="cpu") == "minimax"
+    assert D.resolve_backend("isotonic", "l2", None, shape=None,
+                             platform="cpu") == "scan"
+
+
+def test_rule_matching_shape_buckets():
+  r = plan_mod.PlanRule("forward", "minimax", min_n=8, max_n=64,
+                        max_rows=100, max_elems=200_000)
+  ok = dict(platform="cpu", dtype="*")
+  assert r.matches("forward", "isotonic", "l2", shape=(4, 32), **ok)
+  assert not r.matches("forward", "isotonic", "l2", shape=(4, 7), **ok)
+  assert not r.matches("forward", "isotonic", "l2", shape=(4, 65), **ok)
+  assert not r.matches("forward", "isotonic", "l2", shape=(101, 32), **ok)
+  # rows * n^2 above the cap
+  assert not r.matches("forward", "isotonic", "l2", shape=(100, 64), **ok)
+  assert not r.matches("backward", "isotonic", "l2", shape=(4, 32), **ok)
+
+
+# ---------------------------------------------------------------------------
+# Serialization: round-trip, strictness, hashing.
+# ---------------------------------------------------------------------------
+
+
+def _sample_plan():
+  return plan_mod.ExecutionPlan(
+      name="sample",
+      rules=(
+          plan_mod.PlanRule("forward", "scan", op="isotonic",
+                            regularization="l2", platform="cpu", max_n=6400,
+                            evidence=("row/a", "row/b")),
+          plan_mod.PlanRule("forward", "minimax", max_n=64,
+                            max_elems=16_000_000),
+          plan_mod.PlanRule("backward", "segscan"),
+          plan_mod.PlanRule("projection", "fused", op="projection"),
+      ),
+      meta={"note": "test"})
+
+
+def test_plan_round_trips_through_json(tmp_path):
+  plan = _sample_plan()
+  back = plan_mod.ExecutionPlan.from_json(plan.to_json())
+  assert back == plan
+  assert back.to_dict() == plan.to_dict()
+  assert back.plan_hash() == plan.plan_hash()
+  path = tmp_path / "plan.json"
+  plan.save(str(path))
+  assert plan_mod.load_plan(str(path)).to_dict() == plan.to_dict()
+
+
+def test_plan_hash_ignores_meta_but_not_rules():
+  plan = _sample_plan()
+  import dataclasses
+  remeta = dataclasses.replace(plan, meta={"unix_time": 123456})
+  assert remeta.plan_hash() == plan.plan_hash()
+  rerule = dataclasses.replace(
+      plan, rules=plan.rules[:-1])
+  assert rerule.plan_hash() != plan.plan_hash()
+
+
+def test_plan_rejects_schema_version_mismatch():
+  d = _sample_plan().to_dict()
+  d["schema"] = "repro.plan/v0"
+  with pytest.raises(ValueError, match="schema mismatch"):
+    plan_mod.ExecutionPlan.from_dict(d)
+  with pytest.raises(ValueError, match="schema mismatch"):
+    plan_mod.ExecutionPlan.from_dict({"name": "no-schema", "rules": []})
+
+
+def test_plan_rejects_unknown_fields():
+  d = _sample_plan().to_dict()
+  d["surprise"] = 1
+  with pytest.raises(ValueError, match="unknown field.*surprise"):
+    plan_mod.ExecutionPlan.from_dict(d)
+  d = _sample_plan().to_dict()
+  d["rules"][0]["cutoff"] = 64
+  with pytest.raises(ValueError, match="unknown field.*cutoff"):
+    plan_mod.ExecutionPlan.from_dict(d)
+
+
+def test_plan_rejects_malformed_rules():
+  with pytest.raises(ValueError, match="missing required field"):
+    plan_mod.PlanRule.from_dict({"kind": "forward"})
+  with pytest.raises(ValueError, match="kind must be one of"):
+    plan_mod.PlanRule.from_dict({"kind": "sideways", "backend": "scan"})
+  with pytest.raises(ValueError, match="evidence"):
+    plan_mod.PlanRule.from_dict(
+        {"kind": "forward", "backend": "scan", "evidence": [1, 2]})
+  with pytest.raises(ValueError, match="not valid JSON"):
+    plan_mod.ExecutionPlan.from_json("{nope")
+
+
+def test_committed_default_plan_loads_and_is_hashable():
+  plan = plan_mod.load_plan(plan_mod.DEFAULT_PLAN_PATH)
+  assert plan.rules, "committed default plan must not be empty"
+  assert len(plan.plan_hash()) == 12
+  hash(plan)  # must be usable as a custom_vjp static argument
+  for rule in plan.rules:
+    assert rule.evidence, f"committed rule {rule} has no evidence"
+
+
+# ---------------------------------------------------------------------------
+# Plan-pinned execution: plans ride the custom VJPs as static args.
+# ---------------------------------------------------------------------------
+
+
+def test_plan_pins_backend_under_jit_and_grad():
+  x = jnp.array(rng.normal(size=(3, 12)).astype(np.float32))
+  pinned = plan_mod.ExecutionPlan(
+      name="jit-pin", rules=(
+          plan_mod.PlanRule("forward", "minimax"),
+          plan_mod.PlanRule("backward", "scatter"),
+          plan_mod.PlanRule("projection", "fused", op="projection"),
+      ))
+
+  @jax.jit
+  def f(x):
+    return soft_rank(x, plan=pinned).sum()
+
+  metrics.reset()
+  jax.grad(f)(x)
+  c = metrics.counters("dispatch_calls")
+  assert c.get("dispatch_calls{backend=minimax,op=isotonic,"
+               "regularization=l2}", 0) >= 1
+  cb = metrics.counters("dispatch_bwd_calls")
+  assert cb.get("dispatch_bwd_calls{backend=scatter,op=projection,"
+                "regularization=l2}", 0) >= 1
+
+
+def test_plan_pinned_results_match_default_routing():
+  x = jnp.array(rng.normal(size=(2, 3, 9)).astype(np.float32))
+  pinned = plan_mod.ExecutionPlan(
+      name="alt", rules=(
+          plan_mod.PlanRule("forward", "lax"),
+          plan_mod.PlanRule("backward", "scatter"),
+      ))
+  for fn in (lambda v, **kw: soft_sort(v, 0.5, "l2", **kw),
+             lambda v, **kw: soft_rank(v, 0.5, "kl", **kw)):
+    base = fn(x)
+    alt = fn(x, plan=pinned)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(alt),
+                               rtol=1e-5, atol=1e-5)
+    gb = jax.grad(lambda v: fn(v).sum())(x)
+    ga = jax.grad(lambda v: fn(v, plan=pinned).sum())(x)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(ga),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: `--plan plan.json` (set_active_plan(load_plan(...))) and
+# use_plan(plan) produce identical dispatch-counter traces.
+# ---------------------------------------------------------------------------
+
+
+def _workload():
+  x = jnp.array(np.random.default_rng(5).normal(size=(4, 16))
+                .astype(np.float32))
+  w = jnp.arange(16.0, 0.0, -1.0)
+  isotonic_l2(x)
+  jax.grad(lambda v: isotonic_kl(v, w).sum())(x)
+  soft_sort(x, 0.7, "l2")
+  jax.grad(lambda v: soft_rank(v, 0.7, "kl").sum())(x)
+
+
+def _dispatch_trace():
+  return {k: v for k, v in metrics.counters("").items()
+          if k.startswith(("dispatch", "projection", "plan_decide"))}
+
+
+def test_plan_flag_and_use_plan_produce_identical_counter_traces(tmp_path):
+  plan = plan_mod.ExecutionPlan(
+      name="served", rules=(
+          plan_mod.PlanRule("forward", "lax"),
+          plan_mod.PlanRule("backward", "scatter"),
+          plan_mod.PlanRule("projection", "fused", op="projection"),
+      ))
+  path = tmp_path / "plan.json"
+  plan.save(str(path))
+
+  # Path A: exactly what `launch/{train,serve}.py --plan plan.json` does.
+  metrics.reset()
+  plan_mod.set_active_plan(plan_mod.load_plan(str(path)))
+  try:
+    _workload()
+  finally:
+    plan_mod.set_active_plan(None)
+  trace_flag = _dispatch_trace()
+
+  # Path B: the context-manager API on the in-memory plan.
+  metrics.reset()
+  with plan_mod.use_plan(plan):
+    _workload()
+  trace_ctx = _dispatch_trace()
+
+  assert trace_flag == trace_ctx
+  assert any(k.startswith("plan_decide") for k in trace_flag)
+  assert trace_flag.get("dispatch_calls{backend=lax,op=isotonic,"
+                        "regularization=l2}", 0) >= 1
+
+
+def test_plan_provenance_reports_governing_plan():
+  prov = plan_mod.plan_provenance()
+  assert prov["plan_source"] in ("default_plan", "builtin")
+  pinned = plan_mod.ExecutionPlan(name="prov")
+  with plan_mod.use_plan(pinned):
+    prov = plan_mod.plan_provenance()
+    assert prov == {"plan_name": "prov",
+                    "plan_hash": pinned.plan_hash(),
+                    "plan_source": "plan"}
+  assert plan_mod.plan_provenance(pinned)["plan_source"] == "arg"

@@ -28,6 +28,16 @@ Three checks (the first always runs, the others only with their flag):
    the fused pipeline being slower than the reference chain it replaces is
    a regression by definition and fails the build.
 
+4. **Plan evidence** (``--plan PLAN.json``) — the committed
+   ``default_plan.json`` must load strictly (schema version, no unknown
+   fields), every rule must reference a backend registered for its kind,
+   a winning ``minimax`` rule must carry its ``max_elems`` memory cap, and
+   every rule must cite at least one ``evidence`` row name that exists
+   *with a finite timing* in ``--plan-bench`` / ``--plan-bench-projection``
+   — so a stale or hand-edited plan (claiming measurements that were never
+   made) fails the build.  NOTE: run this against the *committed* BENCH
+   artifacts, before any smoke run overwrites them.
+
 Exit status 0 = clean; 1 = problems (each printed on stderr).
 """
 
@@ -169,6 +179,56 @@ def check_projection_artifact(path: str) -> list[str]:
   return problems
 
 
+def _evidenced_names(paths: list[str]) -> set[str]:
+  """Row names with at least one finite timing across the artifacts."""
+  names: set[str] = set()
+  for path in paths:
+    if not path or not os.path.exists(path):
+      continue
+    with open(path, encoding="utf-8") as f:
+      payload = json.load(f)
+    for r in payload.get("results", []):
+      if isinstance(r, dict) and "name" in r and _finite_timing(r):
+        names.add(r["name"])
+  return names
+
+
+def check_plan(plan_path: str, bench_paths: list[str]) -> list[str]:
+  """Committed-plan gate: strict load, registered backends, evidence."""
+  from repro import plan as plan_mod
+  problems = []
+  try:
+    plan = plan_mod.load_plan(plan_path)
+  except (OSError, ValueError) as e:
+    return [f"{plan_path}: failed to load: {e}"]
+  fwd, bwd, proj = _registered()
+  by_kind = {"forward": fwd, "backward": bwd, "projection": proj}
+  evidenced = _evidenced_names(bench_paths)
+  missing_artifacts = [p for p in bench_paths if not os.path.exists(p)]
+  for p in missing_artifacts:
+    problems.append(f"{plan_path}: evidence artifact {p} not found")
+  for i, rule in enumerate(plan.rules):
+    where = f"{plan_path}: rule #{i} ({rule.kind} -> {rule.backend!r})"
+    if rule.backend not in by_kind[rule.kind]:
+      problems.append(
+          f"{where}: backend not registered for kind {rule.kind!r} "
+          f"(have {sorted(by_kind[rule.kind])})")
+    if rule.backend == "minimax" and rule.max_elems is None:
+      problems.append(f"{where}: minimax rule without a 'max_elems' memory "
+                      f"cap — the O(n^2) form must stay size-capped")
+    if not rule.evidence:
+      problems.append(f"{where}: no 'evidence' timing rows — the committed "
+                      f"plan must be measurement-backed (tools/autotune.py)")
+      continue
+    backed = [e for e in rule.evidence if e in evidenced]
+    if not backed and not missing_artifacts:
+      problems.append(
+          f"{where}: none of its evidence rows "
+          f"{list(rule.evidence)[:3]}{'...' if len(rule.evidence) > 3 else ''} "
+          f"appear with a finite timing in {bench_paths}")
+  return problems
+
+
 def main(argv: list[str]) -> int:
   ap = argparse.ArgumentParser()
   ap.add_argument("--bench", default=None,
@@ -178,6 +238,14 @@ def main(argv: list[str]) -> int:
                   help="also assert BENCH_projection.json covers every "
                        "projection path and that fused is not slower than "
                        "composed in the same run")
+  ap.add_argument("--plan", default=None, metavar="PLAN_JSON",
+                  help="also validate a committed ExecutionPlan: strict "
+                       "schema, registered backends, every rule evidenced "
+                       "by a finite timing row")
+  ap.add_argument("--plan-bench", default="BENCH_runtime.json",
+                  help="artifact(s) plan evidence may cite (runtime)")
+  ap.add_argument("--plan-bench-projection", default="BENCH_projection.json",
+                  help="artifact(s) plan evidence may cite (projection)")
   args = ap.parse_args(argv)
 
   problems = check_docs_coverage()
@@ -185,10 +253,14 @@ def main(argv: list[str]) -> int:
     problems += check_bench_artifact(args.bench)
   if args.bench_projection:
     problems += check_projection_artifact(args.bench_projection)
+  if args.plan:
+    problems += check_plan(args.plan,
+                           [args.plan_bench, args.plan_bench_projection])
   for p in problems:
     print(p, file=sys.stderr)
   checked = "docs" + (f" + {args.bench}" if args.bench else "") + (
-      f" + {args.bench_projection}" if args.bench_projection else "")
+      f" + {args.bench_projection}" if args.bench_projection else "") + (
+      f" + plan:{args.plan}" if args.plan else "")
   print(f"check_backends: {checked}, {len(problems)} problems")
   return 1 if problems else 0
 
