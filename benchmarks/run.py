@@ -16,6 +16,10 @@ these:
 * ``BENCH_projection.json`` — fused vs composed projection-pipeline
   e2e fwd / fwd+bwd timings with per-cell speedups and solver share,
   emitted by both the full run and ``--smoke``;
+* ``BENCH_serving.json`` — the `repro.serving` engine vs per-request
+  jit dispatch over the same mixed-size request stream (throughput,
+  p50/p95/p99 latency, batch occupancy, shed demo), emitted by both the
+  full run and ``--smoke``;
 * ``BENCH_figures.json`` — every other paper-figure/table benchmark row,
   emitted by the full run.
 
@@ -23,8 +27,8 @@ Both artifacts embed the ``repro.obs`` metrics snapshot (per-backend
 dispatch-resolution counters, shape buckets, trace-cache counts) taken at
 write time, plus provenance meta (git sha, platform, jax version).
 
-``--smoke`` runs only the backend sweep, depth curve, and projection
-suite at reduced sizes (n=1024 included so the scan-vs-lax and
+``--smoke`` runs only the backend sweep, depth curve, projection, and
+serving suites at reduced sizes (n=1024 included so the scan-vs-lax and
 fused-vs-composed speedup evidence survives the cut): a fast signal that
 every registered backend still executes and emits schema-valid artifacts.
 """
@@ -41,6 +45,7 @@ from benchmarks import (
     bench_projection,
     bench_router,
     bench_runtime,
+    bench_serving,
     bench_topk,
     common,
 )
@@ -57,6 +62,7 @@ BENCHES = {
     "backend_sweep": bench_runtime.run_backend_sweep,  # BENCH_runtime.json
     "depth_curve": bench_runtime.run_depth_curve,      # BENCH_depth_curve.json
     "projection": bench_projection.run,                # BENCH_projection.json
+    "serving": bench_serving.run,                      # BENCH_serving.json
 }
 
 
@@ -78,6 +84,7 @@ def main() -> None:
     bench_runtime.run_backend_sweep(smoke=True)
     bench_runtime.run_depth_curve(smoke=True)
     bench_projection.run(smoke=True)
+    bench_serving.run(smoke=True)
     return
 
   names = args.only.split(",") if args.only else list(BENCHES)

@@ -27,6 +27,15 @@ ordered by their (distinct) bit patterns rather than treated as equal keys
 — numerically irrelevant downstream, where equal values merge into one
 isotonic block anyway.
 
+Staging caveat: the packed fast path must NOT be traced inside a
+``jax.custom_vjp`` body.  Lowering a custom_vjp sub-jaxpr with global x64
+off re-canonicalizes the size-changing u32 -> u64 bitcast into a
+shape-preserving u32 no-op, which splits the packed sort into independent
+word sorts (the permutation payload silently becomes identity).  Callers
+that wrap a pipeline in custom_vjp (the fused projection) compute these
+sorts in the surrounding trace context and pass the permutations in as
+residual arguments instead.
+
 All permutations produced by this module are int32 end-to-end (an n that
 overflows int32 would OOM long before the index dtype matters).
 """

@@ -54,7 +54,9 @@ from jax import lax
 from repro.core.isotonic import isotonic_kl, isotonic_l2
 from repro.core.permutations import (
     apply_inverse_permutation,
+    argsort_descending,
     argsort_descending_fast,
+    inverse_permutation,
     invert_permutation_fast,
     sort_descending,
 )
@@ -143,7 +145,14 @@ def _sorted_w_unbatched(ws: Array) -> tuple[Array, Array, Array]:
 
 def _fused_forward(regularization, impl, plan, z_is_sorted, w_is_sorted,
                    z, w, z_perm, w_perm):
-  """Shared primal: returns (out, residuals)."""
+  """Shared primal: returns (out, residuals).
+
+  This function is staged *inside* the custom_vjp, where the packed u64
+  sort fast path miscompiles (see ``_fused_entry``), so the permutation
+  fallbacks below use the safe comparator sorts.  Dispatch callers never
+  hit them: ``_fused_entry`` precomputes ``z_perm`` / ``w_perm`` with the
+  fast path in the surrounding trace context.
+  """
   n = z.shape[-1]
   zs = lax.stop_gradient(z)
   if z_is_sorted:
@@ -152,8 +161,9 @@ def _fused_forward(regularization, impl, plan, z_is_sorted, w_is_sorted,
     sigma, sigma_inv = z_perm
     s = jnp.take_along_axis(zs, sigma, axis=-1)
   else:
-    s, sigma = argsort_descending_fast(zs)
-    sigma_inv = invert_permutation_fast(sigma)
+    sigma = argsort_descending(zs)
+    s = jnp.take_along_axis(zs, sigma, axis=-1)
+    sigma_inv = inverse_permutation(sigma)
 
   ws = lax.stop_gradient(w)
   if ws.ndim > 1 and ws.shape != z.shape:
@@ -164,11 +174,10 @@ def _fused_forward(regularization, impl, plan, z_is_sorted, w_is_sorted,
   elif w_perm is not None:
     tau, tau_inv = w_perm
     w_sorted = jnp.take_along_axis(ws, tau, axis=-1)
-  elif ws.ndim == 1:
-    w_sorted, _, tau_inv = _sorted_w_unbatched(ws)
   else:
-    w_sorted, tau = argsort_descending_fast(ws)
-    tau_inv = invert_permutation_fast(tau)
+    tau = argsort_descending(ws)
+    w_sorted = jnp.take_along_axis(ws, tau, axis=-1)
+    tau_inv = inverse_permutation(tau)
 
   if regularization == "l2":
     y = s - w_sorted                       # broadcasts unbatched w_sorted
@@ -271,6 +280,35 @@ def _fused_entry(regularization: str, z: Array, w: Array, impl: str | None,
                  plan=None, *, z_is_sorted: bool = False,
                  w_is_sorted: bool = False, z_perm=None,
                  w_perm=None) -> Array:
+  """Precompute the sort permutations OUTSIDE the custom_vjp, then project.
+
+  The packed u64 argsort (``argsort_descending_fast``) must not be staged
+  inside a custom_vjp body: when the custom_vjp sub-jaxpr is lowered with
+  global x64 off, the size-changing u32(..., 2) -> u64 bitcast is
+  re-canonicalized to a shape-preserving u32 -> u32 no-op, and the single
+  packed sort silently splits into two *independent* word sorts — the
+  sorted values (high word) still come out right, but the permutation
+  payload (low word) degenerates to identity.  Plain jit and eager lower
+  the bitcast correctly.  The sorts are nondifferentiable residuals
+  (``stop_gradient``) in any case, so they run here, in the surrounding
+  trace context, and enter the custom_vjp as ``z_perm`` / ``w_perm``
+  (tests/test_projection_fused.py::test_fused_matches_eager_under_jit is
+  the regression guard).
+  """
+  z = jnp.asarray(z)
+  if not z_is_sorted and z_perm is None:
+    _, sigma = argsort_descending_fast(lax.stop_gradient(z))
+    z_perm = (sigma, invert_permutation_fast(sigma))
+  if not w_is_sorted and w_perm is None:
+    ws = lax.stop_gradient(jnp.asarray(w, z.dtype))
+    if ws.ndim > 1 and ws.shape != z.shape:
+      ws = jnp.broadcast_to(ws, z.shape)
+    if ws.ndim == 1:
+      _, tau, tau_inv = _sorted_w_unbatched(ws)
+    else:
+      _, tau = argsort_descending_fast(ws)
+      tau_inv = invert_permutation_fast(tau)
+    w_perm = (tau, tau_inv)
   return _fused_projection(regularization, impl, plan, bool(z_is_sorted),
                            bool(w_is_sorted), z, w, z_perm, w_perm)
 

@@ -68,6 +68,7 @@ time only, and is a no-op when metrics are disabled (``REPRO_METRICS=0``).
 from __future__ import annotations
 
 import contextlib
+import functools
 import os
 from typing import Callable
 
@@ -507,6 +508,48 @@ def dispatch_backward(op: str, regularization: str, backend: str | None,
   if orig_dtype is not None:
     out = out.astype(orig_dtype)
   return out.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Jit-stable entry points.
+# ---------------------------------------------------------------------------
+
+_STABLE_ENTRIES: dict[tuple, Callable] = {}
+_STABLE_DISPATCHERS = {"forward": dispatch, "backward": dispatch_backward}
+
+
+def stable_entry(op: str, regularization: str, backend: str | None = None,
+                 *, kind: str = "forward",
+                 plan: ExecutionPlan | None = None) -> Callable[..., Array]:
+  """A process-stable callable for one pinned dispatch configuration.
+
+  ``jax.jit`` keys its trace cache on function identity, and AOT callers
+  (``jax.jit(fn).lower(...).compile()``, the serving engine's executable
+  cache) need a deterministic function object per configuration — an
+  ad-hoc ``lambda``/``partial`` built at the call site defeats both.
+  This returns *the same* callable object for the same
+  ``(kind, op, regularization, backend, plan)`` every time:
+
+      f = stable_entry("isotonic", "l2", "scan")
+      f is stable_entry("isotonic", "l2", "scan")   # True
+      jax.jit(f)(y)        # hits the jit cache across call sites
+      jax.jit(f).lower(spec).compile()              # AOT-friendly
+
+  ``kind`` is ``"forward"`` (:func:`dispatch`) or ``"backward"``
+  (:func:`dispatch_backward`); the pinned args follow those functions'
+  signatures, so the returned callable takes the dispatch ``*args``.
+  """
+  if kind not in _STABLE_DISPATCHERS:
+    raise ValueError(f"kind must be one of "
+                     f"{tuple(_STABLE_DISPATCHERS)}, got {kind!r}")
+  key = (kind, op, regularization, backend,
+         None if plan is None else plan.plan_hash())
+  fn = _STABLE_ENTRIES.get(key)
+  if fn is None:
+    fn = functools.partial(_STABLE_DISPATCHERS[kind], op, regularization,
+                           backend, plan=plan)
+    _STABLE_ENTRIES[key] = fn
+  return fn
 
 
 # ---------------------------------------------------------------------------

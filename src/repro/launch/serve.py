@@ -1,12 +1,23 @@
-"""Batched serving driver: prefill + greedy decode loop.
+"""Serving drivers: the soft-op engine and the LM prefill/decode loop.
 
-Serves a (reduced or full) architecture with batched requests: prefill the
-prompt batch once, then decode tokens autoregressively with a uniform
-position counter (continuous batching with per-row lengths is a documented
-extension — the cache layout already supports per-row fill levels).
+Two modes share this entry point:
 
-  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
-      --batch 4 --prompt-len 32 --gen 16
+* ``--engine`` — the `repro.serving` micro-batching engine for the
+  soft-sort/rank op family: a mixed-size synthetic request stream runs
+  through plan-derived AOT warmup, shape-bucketed dynamic batching and
+  admission control, and prints throughput/latency/occupancy (docs/
+  SERVING.md).  ``--arch`` is not needed in this mode:
+
+    PYTHONPATH=src python -m repro.launch.serve --engine \
+        --engine-requests 500 --engine-max-batch 32
+
+* LM mode (default, requires ``--arch``) — prefill the prompt batch
+  once, then decode tokens autoregressively with a uniform position
+  counter (continuous batching with per-row lengths is a documented
+  extension — the cache layout already supports per-row fill levels):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+        --smoke --batch 4 --prompt-len 32 --gen 16
 """
 
 from __future__ import annotations
@@ -20,11 +31,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import plan as repro_plan
-from repro.configs.base import get_config
-from repro.data.pipeline import pipeline_for_arch
-from repro.launch import steps as ST
-from repro.launch.dryrun import parse_overrides
-from repro.models import transformer as T
 from repro.obs import artifacts as obs_artifacts
 from repro.obs.tracing import trace_annotation
 
@@ -35,24 +41,74 @@ def greedy(logits):
   return jnp.argmax(logits, -1)
 
 
-def main():
-  ap = argparse.ArgumentParser()
-  ap.add_argument("--arch", required=True)
-  ap.add_argument("--smoke", action="store_true")
-  ap.add_argument("--batch", type=int, default=4)
-  ap.add_argument("--prompt-len", type=int, default=32)
-  ap.add_argument("--gen", type=int, default=16)
-  ap.add_argument("--bench-json", default=None, metavar="PATH",
-                  help="write a schema-v1 BENCH artifact (prefill/decode "
-                       "walls + dispatch metrics) on exit")
-  ap.add_argument("--plan", default=None, metavar="PLAN_JSON",
-                  help="install an ExecutionPlan (repro.plan JSON) as the "
-                       "active plan for every dispatch decision")
-  ap.add_argument("--set", action="append", dest="overrides")
-  args = ap.parse_args()
+def run_engine(args) -> None:
+  """Drive the repro.serving engine over a synthetic mixed-n stream."""
+  from repro.obs import metrics
+  from repro.obs.timing import percentiles
+  from repro.serving import EngineConfig, ServingEngine, synthetic_stream
 
-  if args.plan:
-    repro_plan.set_active_plan(repro_plan.load_plan(args.plan))
+  ops = tuple(args.engine_ops.split(","))
+  cfg = EngineConfig(
+      ops=ops,
+      min_bucket=args.engine_min_n,
+      max_bucket=args.engine_max_n,
+      max_batch=args.engine_max_batch,
+      max_wait_ms=args.engine_max_wait_ms,
+      queue_capacity=args.engine_queue,
+      default_deadline_ms=args.engine_deadline_ms,
+      impl=args.impl,
+  )
+  engine = ServingEngine(cfg, plan=repro_plan.get_active_plan())
+  t0 = time.time()
+  compiled = engine.warmup()
+  t_warm = time.time() - t0
+  print(f"[engine] warmed {compiled} executables over "
+        f"{len(engine.policy.sizes)} n-buckets x "
+        f"{len(engine.policy.row_sizes)} row-buckets in {t_warm:.1f}s")
+
+  requests = synthetic_stream(
+      args.engine_requests, seed=args.engine_seed, ops=ops,
+      n_min=args.engine_min_n, n_max=args.engine_max_n,
+      deadline_ms=args.engine_deadline_ms)
+  t0 = time.time()
+  with trace_annotation("repro_serve_engine"):
+    results = engine.serve(requests)
+  wall = time.time() - t0
+  ok = [r for r in results if r.ok]
+  shed = [r for r in results if not r.ok]
+  lat = sorted(r.latency_us for r in ok) if ok else [0.0]
+  p50, p95, p99 = percentiles(lat, (50, 95, 99))
+  misses = sum(metrics.counters("aot_cache_miss").values())
+  print(f"[engine] served {len(ok)}/{len(results)} requests "
+        f"({len(shed)} shed) in {wall:.3f}s "
+        f"({len(ok) / max(wall, 1e-9):.0f} req/s); "
+        f"p50/p95/p99 latency {p50:.0f}/{p95:.0f}/{p99:.0f} us; "
+        f"aot_cache_miss={misses}")
+
+  if args.bench_json:
+    results_rows = [{
+        "name": "serve/engine_stream",
+        "wall_us": wall * 1e6,
+        "req_per_s": len(ok) / max(wall, 1e-9),
+        "requests": len(results), "ok": len(ok), "shed": len(shed),
+        "p50_us": p50, "p95_us": p95, "p99_us": p99,
+        "aot_cache_miss_after_warmup": misses,
+    }]
+    obs_artifacts.write_bench_artifact(
+        args.bench_json, results_rows,
+        obs_artifacts.collect_meta(
+            suite="serve-engine", ops=",".join(ops),
+            requests=args.engine_requests,
+            max_batch=cfg.max_batch, max_wait_ms=cfg.max_wait_ms,
+            **repro_plan.plan_provenance()))
+
+
+def run_lm(args) -> None:
+  from repro.configs.base import get_config
+  from repro.data.pipeline import pipeline_for_arch
+  from repro.launch import steps as ST
+  from repro.launch.dryrun import parse_overrides
+  from repro.models import transformer as T
 
   if args.smoke:
     from repro.configs.smoke import smoke_config
@@ -73,7 +129,9 @@ def main():
            if k in ("tokens", "image_embeds")}
 
   prefill = jax.jit(ST.make_prefill_step(cfg, max_len))
-  decode = jax.jit(ST.make_decode_step(cfg))
+  # Donate the KV caches (positional arg 1): each decode step writes the
+  # caches in place instead of copying the full cache pytree per token.
+  decode = jax.jit(ST.make_decode_step(cfg), donate_argnums=(1,))
 
   t0 = time.time()
   with trace_annotation("repro_serve_prefill"):
@@ -119,6 +177,51 @@ def main():
             suite="serve", arch=args.arch, smoke=bool(args.smoke),
             batch=args.batch, prompt_len=args.prompt_len, gen=args.gen,
             **repro_plan.plan_provenance()))
+
+
+def main():
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--arch", default=None,
+                  help="LM architecture (required unless --engine)")
+  ap.add_argument("--smoke", action="store_true")
+  ap.add_argument("--batch", type=int, default=4)
+  ap.add_argument("--prompt-len", type=int, default=32)
+  ap.add_argument("--gen", type=int, default=16)
+  ap.add_argument("--bench-json", default=None, metavar="PATH",
+                  help="write a schema-v1 BENCH artifact (prefill/decode "
+                       "walls + dispatch metrics) on exit")
+  ap.add_argument("--plan", default=None, metavar="PLAN_JSON",
+                  help="install an ExecutionPlan (repro.plan JSON) as the "
+                       "active plan for every dispatch decision")
+  ap.add_argument("--set", action="append", dest="overrides")
+  # Soft-op serving engine mode (repro.serving).
+  ap.add_argument("--engine", action="store_true",
+                  help="serve the soft-op family through the repro.serving "
+                       "micro-batching engine instead of the LM loop")
+  ap.add_argument("--engine-ops",
+                  default="soft_rank/l2/desc,soft_sort/l2/desc",
+                  help="comma-separated repro.serving.SERVING_OPS keys")
+  ap.add_argument("--engine-requests", type=int, default=500)
+  ap.add_argument("--engine-seed", type=int, default=0)
+  ap.add_argument("--engine-min-n", type=int, default=64)
+  ap.add_argument("--engine-max-n", type=int, default=4096)
+  ap.add_argument("--engine-max-batch", type=int, default=32)
+  ap.add_argument("--engine-max-wait-ms", type=float, default=2.0)
+  ap.add_argument("--engine-queue", type=int, default=1024)
+  ap.add_argument("--engine-deadline-ms", type=float, default=None)
+  ap.add_argument("--impl", default=None,
+                  help="pin the isotonic backend for --engine mode")
+  args = ap.parse_args()
+
+  if args.plan:
+    repro_plan.set_active_plan(repro_plan.load_plan(args.plan))
+
+  if args.engine:
+    run_engine(args)
+    return
+  if not args.arch:
+    raise SystemExit("--arch is required unless --engine is given")
+  run_lm(args)
 
 
 if __name__ == "__main__":

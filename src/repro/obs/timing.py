@@ -9,6 +9,7 @@ artifacts carry the full distribution, not just the median.
 
 from __future__ import annotations
 
+import math
 import time
 from typing import Callable
 
@@ -45,6 +46,23 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5,
       metrics.observe("bench_us", dt * 1e6, name=name)
   times.sort()
   return times[len(times) // 2] * 1e6
+
+
+def percentiles(samples, qs=(50, 95, 99)) -> tuple[float, ...]:
+  """Nearest-rank percentiles of a sample list (sorted or not).
+
+  The serving benchmarks report p50/p95/p99 request latencies with this
+  — nearest-rank (no interpolation) so the values are actual observed
+  latencies.  Returns one float per ``q``; empty input gives zeros.
+  """
+  if not samples:
+    return tuple(0.0 for _ in qs)
+  ordered = sorted(samples)
+  out = []
+  for q in qs:
+    rank = max(1, math.ceil(q / 100.0 * len(ordered)))
+    out.append(float(ordered[min(rank, len(ordered)) - 1]))
+  return tuple(out)
 
 
 class wall_timer:

@@ -397,6 +397,72 @@ def _plan_decide_note(kind: str, backend: str, source: str,
                        source=source, plan=plan_name)
 
 
+def _governing_plans(plan: ExecutionPlan | None) -> tuple[ExecutionPlan, ...]:
+  """The plan chain as it would be consulted right now, most-specific
+  first (explicit/active > packaged default > builtin), Nones dropped."""
+  chain = (plan if plan is not None else get_active_plan(),
+           default_plan(), builtin_plan())
+  return tuple(p for p in chain if p is not None)
+
+
+def shape_breakpoints(plan: ExecutionPlan | None = None) -> tuple[int, ...]:
+  """Sorted unique n-edges at which some rule's applicability flips.
+
+  For every shape-constrained rule in the governing plan chain, the
+  inclusive bounds ``max_n`` and ``min_n - 1`` are bucket edges: a
+  serving bucket whose width crosses one would pad requests from one
+  backend regime into another.  ``repro.serving.BucketPolicy.from_plan``
+  splices these into its size ladder.
+  """
+  edges: set[int] = set()
+  for candidate in _governing_plans(plan):
+    for rule in candidate.rules:
+      if rule.max_n is not None:
+        edges.add(rule.max_n)
+      if rule.min_n is not None and rule.min_n > 1:
+        edges.add(rule.min_n - 1)
+  return tuple(sorted(e for e in edges if e >= 1))
+
+
+def resolve_grid(
+    kind: str,
+    ops: Iterable[str],
+    regularizations: Iterable[str],
+    shapes: Iterable[tuple[int, ...]],
+    *,
+    platform: str,
+    dtype: str = "*",
+    plan: ExecutionPlan | None = None,
+) -> list[dict]:
+  """Enumerate plan decisions over an (op x regularization x shape) grid.
+
+  The serving engine's warmup uses this to know, ahead of any traffic,
+  which backend each AOT-compiled bucket will embed — one entry per grid
+  cell: ``{kind, op, regularization, shape, backend, source, plan}``.
+  Unlike :func:`resolve_via_plans` this never records ``plan_decide``
+  counters (it is an enumeration, not a dispatch decision).
+  """
+  shapes = [tuple(s) for s in shapes]
+  out: list[dict] = []
+  for op in ops:
+    for reg in regularizations:
+      for shape in shapes:
+        for source_name, candidate in (
+            ("plan", plan if plan is not None else get_active_plan()),
+            ("default_plan", default_plan()),
+            ("builtin", builtin_plan())):
+          if candidate is None:
+            continue
+          rule = candidate.decide(kind, op, reg, platform=platform,
+                                  dtype=dtype, shape=shape)
+          if rule is not None:
+            out.append({"kind": kind, "op": op, "regularization": reg,
+                        "shape": shape, "backend": rule.backend,
+                        "source": source_name, "plan": candidate.name})
+            break
+  return out
+
+
 def plan_provenance(plan: ExecutionPlan | None = None) -> dict:
   """Attribution block for BENCH artifact ``meta``: which plan governs
   dispatch right now (explicit > active > packaged default > builtin)
@@ -428,5 +494,7 @@ __all__ = [
     "set_active_plan",
     "use_plan",
     "resolve_via_plans",
+    "resolve_grid",
+    "shape_breakpoints",
     "plan_provenance",
 ]

@@ -1,0 +1,67 @@
+"""`repro.serving` — shape-bucketed dynamic batching for the soft-op family.
+
+The paper's operators are fast enough (O(n log n), exact) to sit on a
+request hot path — but only if the serving layer feeds the batched
+kernels properly.  This package turns a stream of heterogeneous
+single requests (arbitrary ``n``, per-request ``eps``/direction/params)
+into saturated batched kernel launches:
+
+* :mod:`repro.serving.bucketing` — shape-bucket policy (pow2 ladder,
+  optionally refined with the active :class:`repro.plan.ExecutionPlan`'s
+  rule breakpoints so no bucket straddles a backend cutoff);
+* :mod:`repro.serving.ops` — the padded batched op family.  Requests are
+  padded *exactly*: every pad element sorts strictly below the real
+  entries and is separated by enough margin that no isotonic block ever
+  pools across the real/pad boundary, so the sliced-back result is
+  bitwise identical to the unpadded call, per backend (the contract the
+  batcher relies on; property-tested in tests/test_padding_invariance.py);
+* :mod:`repro.serving.aot_cache` — bounded LRU of ahead-of-time compiled
+  executables (``jax.jit(...).lower(...).compile()``), keyed by
+  ``(op, regularization, direction, rows, bucket_n)`` and warmable at
+  startup so the first real request never pays compilation;
+* :mod:`repro.serving.admission` — bounded admission queue with typed
+  load-shedding (reject-on-full, expire-in-queue) — never exceptions;
+* :mod:`repro.serving.engine` — the micro-batching engine tying it all
+  together under a configurable max-wait / max-batch policy, with full
+  ``repro.obs`` integration (``serving_admit`` / ``serving_shed`` /
+  ``aot_cache_{hit,miss,evict}`` counters; queue-depth, batch-occupancy,
+  padding-waste and latency histograms).
+
+See docs/SERVING.md for architecture, bucketing/deadline semantics, the
+warmup workflow and the counter reference.
+"""
+
+from repro.serving.admission import (
+    AdmissionQueue,
+    Request,
+    ServeResult,
+    STATUS_ERROR,
+    STATUS_OK,
+    STATUS_SHED_DEADLINE,
+    STATUS_SHED_QUEUE_FULL,
+)
+from repro.serving.aot_cache import AOTExecutableCache
+from repro.serving.bucketing import BucketPolicy
+from repro.serving.engine import (
+    EngineConfig,
+    ServingEngine,
+    synthetic_stream,
+)
+from repro.serving.ops import SERVING_OPS, padded_op
+
+__all__ = [
+    "AOTExecutableCache",
+    "AdmissionQueue",
+    "BucketPolicy",
+    "EngineConfig",
+    "Request",
+    "ServeResult",
+    "ServingEngine",
+    "SERVING_OPS",
+    "STATUS_ERROR",
+    "STATUS_OK",
+    "STATUS_SHED_DEADLINE",
+    "STATUS_SHED_QUEUE_FULL",
+    "padded_op",
+    "synthetic_stream",
+]

@@ -1,0 +1,88 @@
+"""Bounded LRU of ahead-of-time compiled executables.
+
+Per-request ``jax.jit`` dispatch pays a Python-side cache probe plus —
+on any novel shape — trace and compile time *on the request path*.  The
+engine instead compiles each ``(op-variant, rows, bucket_n, dtype)``
+cell once, ahead of time, via ``jax.jit(fn).lower(*specs).compile()``,
+and calls the resulting executable directly.
+
+Counters (``repro.obs.metrics``):
+
+* ``aot_cache_hit`` — executable already resident;
+* ``aot_cache_miss`` — compiled lazily on the request path (a warmup
+  gap: the smoke gate requires this to be 0 after plan-derived warmup);
+* ``aot_cache_warm`` — compiled by explicit warmup (not a miss);
+* ``aot_cache_evict`` — LRU eviction under the capacity bound.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Callable, Hashable
+
+from repro.obs import metrics
+
+
+class AOTExecutableCache:
+  """LRU mapping hashable keys -> compiled executables (thread-safe)."""
+
+  def __init__(self, capacity: int = 128):
+    if capacity < 1:
+      raise ValueError(f"capacity must be >= 1, got {capacity}")
+    self.capacity = capacity
+    self._entries: "collections.OrderedDict[Hashable, object]" = (
+        collections.OrderedDict())
+    self._lock = threading.Lock()
+
+  def __len__(self) -> int:
+    return len(self._entries)
+
+  def __contains__(self, key: Hashable) -> bool:
+    return key in self._entries
+
+  def keys(self):
+    return list(self._entries)
+
+  def get(self, key: Hashable, builder: Callable[[], object]) -> object:
+    """The executable for ``key``, compiling via ``builder()`` on miss."""
+    with self._lock:
+      exe = self._entries.get(key)
+      if exe is not None:
+        self._entries.move_to_end(key)
+        metrics.counter_inc("aot_cache_hit")
+        return exe
+    # Compile outside the lock (compilation can take seconds); a racing
+    # duplicate compile is wasteful but correct — last insert wins.
+    metrics.counter_inc("aot_cache_miss")
+    exe = builder()
+    self._insert(key, exe)
+    return exe
+
+  def warm(self, key: Hashable, builder: Callable[[], object]) -> bool:
+    """Populate ``key`` ahead of traffic; True if a compile happened.
+
+    Warmup compiles count as ``aot_cache_warm``, not misses — so a
+    nonzero ``aot_cache_miss`` after warmup always means the request
+    stream hit a bucket warmup did not enumerate.
+    """
+    with self._lock:
+      if key in self._entries:
+        self._entries.move_to_end(key)
+        return False
+    metrics.counter_inc("aot_cache_warm")
+    exe = builder()
+    self._insert(key, exe)
+    return True
+
+  def _insert(self, key: Hashable, exe: object) -> None:
+    with self._lock:
+      self._entries[key] = exe
+      self._entries.move_to_end(key)
+      while len(self._entries) > self.capacity:
+        self._entries.popitem(last=False)
+        metrics.counter_inc("aot_cache_evict")
+
+  def clear(self) -> None:
+    with self._lock:
+      self._entries.clear()

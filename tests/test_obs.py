@@ -201,3 +201,41 @@ def test_explicit_backend_bypasses_invalid_env(monkeypatch):
 def test_valid_env_backend_still_works(monkeypatch):
   monkeypatch.setenv(D.ENV_VAR, "minimax")
   assert D.resolve_backend("isotonic", "l2", None, shape=(4, 500)) == "minimax"
+
+
+# ---------------------------------------------------------------------------
+# REPRO_BACKWARD / REPRO_PROJECTION validation (same read-time contract).
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_env_backward_raises_clear_error(monkeypatch):
+  monkeypatch.setenv(D.BWD_ENV_VAR, "cuda")
+  with pytest.raises(ValueError, match="REPRO_BACKWARD='cuda'"):
+    D.resolve_backward("isotonic", "l2", None, shape=(4, 9))
+
+
+def test_explicit_backward_bypasses_invalid_env(monkeypatch):
+  monkeypatch.setenv(D.BWD_ENV_VAR, "bogus")
+  assert D.resolve_backward("isotonic", "l2", "segscan",
+                            shape=(4, 9)) == "segscan"
+
+
+def test_valid_env_backward_still_works(monkeypatch):
+  monkeypatch.setenv(D.BWD_ENV_VAR, "scatter")
+  assert D.resolve_backward("isotonic", "l2", None, shape=(4, 9)) == "scatter"
+
+
+def test_unknown_env_projection_raises_clear_error(monkeypatch):
+  monkeypatch.setenv(D.PROJECTION_ENV_VAR, "vectorized")
+  with pytest.raises(ValueError, match="REPRO_PROJECTION='vectorized'"):
+    D.resolve_projection(None, "l2", shape=(4, 9))
+
+
+def test_explicit_projection_bypasses_invalid_env(monkeypatch):
+  monkeypatch.setenv(D.PROJECTION_ENV_VAR, "bogus")
+  assert D.resolve_projection("composed", "l2", shape=(4, 9)) == "composed"
+
+
+def test_valid_env_projection_still_works(monkeypatch):
+  monkeypatch.setenv(D.PROJECTION_ENV_VAR, "fused")
+  assert D.resolve_projection(None, "l2", shape=(4, 9)) == "fused"

@@ -304,3 +304,70 @@ def test_fast_sort_helpers_return_int32():
   np.testing.assert_array_equal(
       np.take_along_axis(np.asarray(x), np.asarray(sigma), axis=-1),
       np.asarray(s))
+
+
+# ---------------------------------------------------------------------------
+# jit must not change fused results (custom_vjp u64-bitcast regression)
+# ---------------------------------------------------------------------------
+
+# Lowering a custom_vjp sub-jaxpr with global x64 off used to demote the
+# packed sort's size-changing u32 -> u64 bitcast to a no-op, splitting it
+# into independent word sorts: sorted values stayed correct while the
+# permutation payload silently became identity, so every jitted fused
+# projection un-permuted with the wrong sigma.  The fix hoists the sorts
+# out of the custom_vjp (``_fused_entry``); these cases pin it down.
+
+
+@pytest.mark.parametrize("reg", ["l2", "kl"])
+@pytest.mark.parametrize("w_mode", ["unsorted", "sorted_hint", "batched"])
+def test_fused_matches_eager_under_jit(reg, w_mode):
+  local = np.random.default_rng(11)
+  n = 8
+  z = jnp.array(local.normal(size=(2, n)).astype(np.float32) * 50)
+  kwargs = {}
+  if w_mode == "batched":
+    w = jnp.array(local.normal(size=(2, n)).astype(np.float32))
+  elif w_mode == "sorted_hint":
+    w = jnp.arange(n, 0, -1, dtype=jnp.float32)
+    kwargs["w_is_sorted"] = True
+  else:
+    w = jnp.array(local.normal(size=(n,)).astype(np.float32))
+  if reg == "kl":
+    w = w / 4.0
+
+  def f(z_, w_):
+    return projection_permutahedron(z_, w_, reg, "lax", path="fused",
+                                    **kwargs)
+
+  eager = np.asarray(f(z, w))
+  jitted = np.asarray(jax.jit(f)(z, w))
+  np.testing.assert_array_equal(eager, jitted)
+  composed = np.asarray(projection_permutahedron(z, w, reg, "lax",
+                                                 path="composed", **kwargs))
+  np.testing.assert_allclose(jitted, composed, rtol=1e-5, atol=1e-5)
+
+
+def test_fused_jit_wide_range_ladder():
+  """The serving pad construction's regime: a steep descending ladder
+  appended to a small real prefix — jit and eager must agree bitwise."""
+  z = jnp.array([[-4.08, 5.11, -0.84, -148.5, -292.9, -437.3, -581.7,
+                  -726.1]], jnp.float32)
+  w = jnp.array([[3., 2., 1., 0., -1., -2., -3., -4.]], jnp.float32)
+
+  def f(z_, w_):
+    return projection_permutahedron(z_, w_, "l2", "lax", path="fused",
+                                    w_is_sorted=True)
+
+  np.testing.assert_array_equal(np.asarray(f(z, w)),
+                                np.asarray(jax.jit(f)(z, w)))
+
+
+def test_fused_grad_matches_under_jit():
+  local = np.random.default_rng(12)
+  z = jnp.array(local.normal(size=(2, 9)).astype(np.float32) * 10)
+  w = jnp.array(local.normal(size=(9,)).astype(np.float32))
+  g = jax.grad(functools.partial(_proj_loss, "fused", "l2"), argnums=(0, 1))
+  ge = g(z, w)
+  gj = jax.jit(g)(z, w)
+  for a, b in zip(ge, gj):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -28,7 +28,14 @@ Three checks (the first always runs, the others only with their flag):
    the fused pipeline being slower than the reference chain it replaces is
    a regression by definition and fails the build.
 
-4. **Plan evidence** (``--plan PLAN.json``) — the committed
+4. **Serving gate** (``--bench-serving BENCH_serving.json``) — the
+   artifact must carry the engine-stream (with p99 latency), batch-
+   occupancy, warm per-request-jit baseline and speedup rows, report
+   zero ``aot_cache_miss`` after plan-derived warmup, and show engine
+   throughput strictly above the warm per-request baseline measured in
+   the same run.
+
+5. **Plan evidence** (``--plan PLAN.json``) — the committed
    ``default_plan.json`` must load strictly (schema version, no unknown
    fields), every rule must reference a backend registered for its kind,
    a winning ``minimax`` rule must carry its ``max_elems`` memory cap, and
@@ -179,6 +186,56 @@ def check_projection_artifact(path: str) -> list[str]:
   return problems
 
 
+def check_serving_artifact(path: str) -> list[str]:
+  """Serving-engine gate: required rows, warmup coverage, and the
+  engine-beats-per-request-jit acceptance bar.
+
+  The artifact must contain finite-timing ``serving/engine_stream``
+  (with p99 latency), ``serving/batch_occupancy``,
+  ``serving/per_request_jit_warm`` and ``serving/speedup`` rows;
+  ``aot_cache_miss_after_warmup`` must be 0 (warmup enumerated every
+  bucket the stream hit); and engine throughput must be *strictly*
+  higher than the warm per-request-jit baseline measured in the same
+  run — the engine existing and losing to ad-hoc dispatch is a
+  regression by definition.
+  """
+  problems = []
+  if not os.path.exists(path):
+    return [f"{path}: artifact not found"]
+  with open(path, encoding="utf-8") as f:
+    payload = json.load(f)
+  rows = {r.get("name"): r for r in payload.get("results", [])
+          if isinstance(r, dict)}
+  required = ("serving/engine_stream", "serving/batch_occupancy",
+              "serving/per_request_jit_warm", "serving/speedup")
+  for name in required:
+    if name not in rows or not _finite_timing(rows[name]):
+      problems.append(f"{path}: missing ran row {name!r}")
+  if problems:
+    return problems
+  stream = rows["serving/engine_stream"]
+  if not isinstance(stream.get("p99_us"), (int, float)):
+    problems.append(f"{path}: serving/engine_stream has no 'p99_us'")
+  misses = stream.get("aot_cache_miss_after_warmup")
+  if misses != 0:
+    problems.append(f"{path}: aot_cache_miss_after_warmup={misses!r} — "
+                    f"plan-derived warmup must cover every bucket the "
+                    f"request stream hits")
+  speed = rows["serving/speedup"]
+  engine_rps = speed.get("engine_req_per_s")
+  warm_rps = speed.get("warm_req_per_s")
+  if not isinstance(engine_rps, (int, float)) or not isinstance(
+      warm_rps, (int, float)):
+    problems.append(f"{path}: serving/speedup is missing "
+                    f"'engine_req_per_s'/'warm_req_per_s'")
+  elif engine_rps <= warm_rps:
+    problems.append(
+        f"{path}: serving regression — engine throughput "
+        f"({engine_rps:.1f} req/s) does not beat per-request jit "
+        f"({warm_rps:.1f} req/s) on the same stream")
+  return problems
+
+
 def _evidenced_names(paths: list[str]) -> set[str]:
   """Row names with at least one finite timing across the artifacts."""
   names: set[str] = set()
@@ -238,6 +295,11 @@ def main(argv: list[str]) -> int:
                   help="also assert BENCH_projection.json covers every "
                        "projection path and that fused is not slower than "
                        "composed in the same run")
+  ap.add_argument("--bench-serving", default=None,
+                  help="also assert BENCH_serving.json has the engine / "
+                       "baseline / occupancy rows, zero post-warmup AOT "
+                       "misses, and engine throughput strictly above the "
+                       "warm per-request-jit baseline")
   ap.add_argument("--plan", default=None, metavar="PLAN_JSON",
                   help="also validate a committed ExecutionPlan: strict "
                        "schema, registered backends, every rule evidenced "
@@ -253,6 +315,8 @@ def main(argv: list[str]) -> int:
     problems += check_bench_artifact(args.bench)
   if args.bench_projection:
     problems += check_projection_artifact(args.bench_projection)
+  if args.bench_serving:
+    problems += check_serving_artifact(args.bench_serving)
   if args.plan:
     problems += check_plan(args.plan,
                            [args.plan_bench, args.plan_bench_projection])
@@ -260,6 +324,7 @@ def main(argv: list[str]) -> int:
     print(p, file=sys.stderr)
   checked = "docs" + (f" + {args.bench}" if args.bench else "") + (
       f" + {args.bench_projection}" if args.bench_projection else "") + (
+      f" + {args.bench_serving}" if args.bench_serving else "") + (
       f" + plan:{args.plan}" if args.plan else "")
   print(f"check_backends: {checked}, {len(problems)} problems")
   return 1 if problems else 0
